@@ -1,0 +1,42 @@
+"""Empirical (CPU wall-clock) verification of the Fig. 1 crossover on
+reduced configs: transformer prefill is super-linear in S, mamba2 linear —
+the crossover must appear on ANY device; here we measure it on CPU."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced
+from repro.core.registry import get
+from repro.models.lm import init_lm_params, lm_forward
+from benchmarks.common import Emitter, wall_time
+
+
+def run(em: Emitter) -> None:
+    tf = dataclasses.replace(reduced(get("qwen2.5-0.5b"), d_model=128,
+                                     n_units=4), name="tf-r")
+    tf = dataclasses.replace(
+        tf, attn=dataclasses.replace(tf.attn, dense_cutoff=1 << 30))
+    sm = dataclasses.replace(reduced(get("mamba2-780m"), d_model=128,
+                                     n_units=4), name="ssm-r")
+    key = jax.random.PRNGKey(0)
+    p_tf = init_lm_params(tf, key)
+    p_sm = init_lm_params(sm, key)
+    ratios = []
+    for seq in (512, 2048, 8192):
+        tok = jnp.ones((1, seq), jnp.int32)
+        f_tf = jax.jit(lambda p, t: lm_forward(tf, p, {"tokens": t},
+                                               train=False))
+        f_sm = jax.jit(lambda p, t: lm_forward(sm, p, {"tokens": t},
+                                               train=False))
+        t1 = wall_time(f_tf, p_tf, tok)
+        t2 = wall_time(f_sm, p_sm, tok)
+        ratios.append(t1 / t2)
+        em.emit(f"fig1m.prefill.transformer.s{seq}", t1 * 1e6,
+                f"vs_ssm={t1 / t2:.2f}x")
+        em.emit(f"fig1m.prefill.mamba2.s{seq}", t2 * 1e6, "")
+    em.emit("fig1m.claim.scaling_inversion", ratios[-1] / ratios[0] * 100,
+            f"ratio_grew={ratios[0]:.2f}->{ratios[-1]:.2f}"
+            f"_monotone={'yes' if ratios[-1] > ratios[0] else 'no'}")

@@ -1,0 +1,35 @@
+"""Paper Fig. 1: TTFT & TPOT scaling — Qwen2.5-0.5B (Transformer) vs
+Mamba2-780m (SSM) on the RTX 4090 time model.
+
+Claims checked: Transformer ~1.9x faster at short seq; SSM 2.65x (TTFT) /
+3x (TPOT) faster at 32K."""
+from __future__ import annotations
+
+from repro.core.config import RTX_4090
+from benchmarks.common import Emitter, cost_for, time_on
+
+SEQS = (1024, 4096, 8192, 16384, 32768)
+
+
+def run(em: Emitter) -> None:
+    for seq in SEQS:
+        tq = time_on(cost_for("qwen2.5-0.5b", "prefill", seq), RTX_4090)
+        tm = time_on(cost_for("mamba2-780m", "prefill", seq), RTX_4090)
+        em.emit(f"fig1.ttft.qwen2.5-0.5b.s{seq}", tq * 1e6,
+                f"ssm_speedup={tq / tm:.2f}x")
+        em.emit(f"fig1.ttft.mamba2-780m.s{seq}", tm * 1e6, "")
+    for seq in (1024, 32768):
+        dq = time_on(cost_for("qwen2.5-0.5b", "decode", seq), RTX_4090)
+        dm = time_on(cost_for("mamba2-780m", "decode", seq), RTX_4090)
+        em.emit(f"fig1.tpot.qwen2.5-0.5b.s{seq}", dq * 1e6,
+                f"ssm_speedup={dq / dm:.2f}x")
+        em.emit(f"fig1.tpot.mamba2-780m.s{seq}", dm * 1e6, "")
+    # claim summary
+    t1k_q = time_on(cost_for("qwen2.5-0.5b", "prefill", 1024), RTX_4090)
+    t1k_m = time_on(cost_for("mamba2-780m", "prefill", 1024), RTX_4090)
+    t32_q = time_on(cost_for("qwen2.5-0.5b", "prefill", 32768), RTX_4090)
+    t32_m = time_on(cost_for("mamba2-780m", "prefill", 32768), RTX_4090)
+    em.emit("fig1.claim.short_transformer_advantage", t1k_m / t1k_q * 100,
+            f"paper=1.9x_model={t1k_m / t1k_q:.2f}x")
+    em.emit("fig1.claim.long_ssm_advantage", t32_q / t32_m * 100,
+            f"paper=2.65x_model={t32_q / t32_m:.2f}x")

@@ -1,0 +1,24 @@
+"""Paper Fig. 3: accuracy-latency frontier at 57K prefill (≈1.5B class).
+
+Accuracy cannot be reproduced without trained weights (we cite the paper's
+numbers); the latency axis is reproduced with the RTX 4090 time model.
+Claim: hybrid keeps ~2.8x TTFT speedup over the Transformer at 57K."""
+from __future__ import annotations
+
+from repro.core.config import RTX_4090
+from benchmarks.common import Emitter, cost_for, time_on
+
+PAPER_ACC = {"qwen2.5-1.5b": 61.1, "mamba2-780m": 36.3,
+             "falcon-h1-0.5b": None}      # 5-shot MMLU (paper-cited)
+
+
+def run(em: Emitter) -> None:
+    t = {}
+    for m in ("qwen2.5-1.5b", "mamba2-780m", "falcon-h1-0.5b"):
+        t[m] = time_on(cost_for(m, "prefill", 57344), RTX_4090)
+        acc = PAPER_ACC.get(m)
+        em.emit(f"fig3.ttft57k.{m}", t[m] * 1e6,
+                f"paper_mmlu={acc if acc else 'n/a'}")
+    em.emit("fig3.claim.hybrid_ttft_speedup",
+            t["qwen2.5-1.5b"] / t["falcon-h1-0.5b"] * 100,
+            f"paper=2.8x_model={t['qwen2.5-1.5b'] / t['falcon-h1-0.5b']:.2f}x")

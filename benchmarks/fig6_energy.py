@@ -1,0 +1,41 @@
+"""Paper Fig. 6: energy & end-to-end throughput vs sequence length on the
+RTX 4090 (Qwen2.5-0.5B vs Mamba2-780m vs Falcon-H1-0.5B).
+
+Claims: at 57K, Transformer 1492 J vs Hybrid 613 J vs SSM 370 J (~75%
+reduction, ~4x); Mamba2/Falcon reach 2.64x/1.54x transformer throughput
+at 32K."""
+from __future__ import annotations
+
+from repro.core.config import RTX_4090
+from benchmarks.common import Emitter, cost_for, energy_on, time_on
+
+TRIO = ("qwen2.5-0.5b", "mamba2-780m", "falcon-h1-0.5b")
+
+
+def run(em: Emitter) -> None:
+    e57 = {}
+    for m in TRIO:
+        c = cost_for(m, "prefill", 57344)
+        e57[m] = energy_on(c, RTX_4090)
+        em.emit(f"fig6.energy57k.{m}", e57[m] * 1e6,
+                f"{e57[m]:.0f}J")
+    red = 1 - e57["mamba2-780m"] / e57["qwen2.5-0.5b"]
+    em.emit("fig6.claim.energy_reduction", red * 100,
+            f"paper~75%_model={red * 100:.0f}%")
+    em.emit("fig6.claim.hybrid_between",
+            e57["falcon-h1-0.5b"] * 1e6,
+            f"ordering={'ok' if e57['mamba2-780m'] < e57['falcon-h1-0.5b'] < e57['qwen2.5-0.5b'] else 'VIOLATED'}")
+    # throughput at 32K: prefill + 256 decode steps, batch 1
+    thr = {}
+    for m in TRIO:
+        tp = time_on(cost_for(m, "prefill", 32768), RTX_4090)
+        td = time_on(cost_for(m, "decode", 32768), RTX_4090)
+        thr[m] = 256 / (tp + 256 * td)
+        em.emit(f"fig6.throughput32k.{m}", (tp + 256 * td) * 1e6,
+                f"{thr[m]:.1f}tok/s")
+    em.emit("fig6.claim.ssm_throughput_x",
+            thr["mamba2-780m"] / thr["qwen2.5-0.5b"] * 100,
+            f"paper=2.64x_model={thr['mamba2-780m'] / thr['qwen2.5-0.5b']:.2f}x")
+    em.emit("fig6.claim.hybrid_throughput_x",
+            thr["falcon-h1-0.5b"] / thr["qwen2.5-0.5b"] * 100,
+            f"paper=1.54x_model={thr['falcon-h1-0.5b'] / thr['qwen2.5-0.5b']:.2f}x")

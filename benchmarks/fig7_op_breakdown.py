@@ -1,0 +1,38 @@
+"""Paper Fig. 7: operator-class latency breakdown of Mamba-1 vs Mamba-2
+(130m) over sequence length on the consumer GPU.
+
+Claims: SSM-specific ops dominate; Mamba-2's SSM share > Mamba-1's
+(d_state 16 -> 128); for Mamba-1 memory ops > arith among non-GEMM, for
+Mamba-2 arith > memory."""
+from __future__ import annotations
+
+from repro.core.config import RTX_4090
+from benchmarks.common import Emitter, class_times, cost_for
+
+SEQS = (256, 1024, 4096, 16384, 65536)
+
+
+def _shares(model: str, seq: int):
+    ct = class_times(cost_for(model, "prefill", seq), RTX_4090)
+    tot = sum(ct.values()) or 1.0
+    return {k: v / tot for k, v in ct.items()}, tot
+
+
+def run(em: Emitter) -> None:
+    for model in ("mamba-130m", "mamba2-130m"):
+        for seq in SEQS:
+            sh, tot = _shares(model, seq)
+            em.emit(f"fig7.{model}.s{seq}", tot * 1e6,
+                    "ssm={:.0f}%_gemm={:.0f}%_arith={:.0f}%_mem={:.0f}%_norm={:.0f}%".format(
+                        100 * sh.get("ssm", 0), 100 * sh.get("gemm", 0),
+                        100 * sh.get("arith", 0), 100 * sh.get("memory", 0),
+                        100 * sh.get("norm", 0)))
+    s1, _ = _shares("mamba-130m", 16384)
+    s2, _ = _shares("mamba2-130m", 16384)
+    em.emit("fig7.claim.mamba2_ssm_share_higher",
+            100 * s2.get("ssm", 0),
+            f"m1={100 * s1.get('ssm', 0):.0f}%_m2={100 * s2.get('ssm', 0):.0f}%_"
+            f"higher={'yes' if s2.get('ssm', 0) > s1.get('ssm', 0) else 'no'}")
+    em.emit("fig7.claim.mamba2_arith_gt_memory",
+            100 * s2.get("arith", 0),
+            f"arith={100 * s2.get('arith', 0):.1f}%_mem={100 * s2.get('memory', 0):.1f}%")

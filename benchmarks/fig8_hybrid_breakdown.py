@@ -1,0 +1,32 @@
+"""Paper Fig. 8: operator breakdown for hybrid models (Zamba2-1.2B;
+Hymba's head-parallel design is out of scope, noted in DESIGN.md).
+
+Claim: hybrids are NOT dominated by SSM ops; GEMM share stays roughly
+constant while SSM share diminishes with sequence length."""
+from __future__ import annotations
+
+from repro.core.config import RTX_4090
+from benchmarks.common import Emitter, class_times, cost_for
+
+SEQS = (1024, 4096, 16384, 49152)
+
+
+def run(em: Emitter) -> None:
+    shares = {}
+    for seq in SEQS:
+        ct = class_times(cost_for("zamba2-1.2b", "prefill", seq), RTX_4090)
+        tot = sum(ct.values()) or 1.0
+        sh = {k: v / tot for k, v in ct.items()}
+        shares[seq] = sh
+        em.emit(f"fig8.zamba2-1.2b.s{seq}", tot * 1e6,
+                "ssm={:.0f}%_gemm={:.0f}%_arith={:.0f}%_mem={:.0f}%".format(
+                    100 * sh.get("ssm", 0), 100 * sh.get("gemm", 0),
+                    100 * sh.get("arith", 0), 100 * sh.get("memory", 0)))
+    em.emit("fig8.claim.hybrid_not_ssm_dominated",
+            100 * shares[16384].get("ssm", 0),
+            f"ssm_share={100 * shares[16384].get('ssm', 0):.0f}%_"
+            f"below50={'yes' if shares[16384].get('ssm', 0) < 0.5 else 'no'}")
+    em.emit("fig8.claim.ssm_share_diminishes",
+            100 * shares[SEQS[-1]].get("ssm", 0),
+            f"{100 * shares[SEQS[0]].get('ssm', 0):.0f}%->"
+            f"{100 * shares[SEQS[-1]].get('ssm', 0):.0f}%")

@@ -1,0 +1,34 @@
+"""Paper Fig. 9: consumer vs edge cross-device comparison.
+
+Claims: on the edge GPU, Mamba-1's SSM ops exceed 55% of latency at every
+sequence length; SSM+GEMM >= 75-80% on both devices; for Transformers the
+GEMM share DROPS on the edge device (non-GEMM penalty grows)."""
+from __future__ import annotations
+
+from repro.core.config import JETSON_ORIN_NANO, RTX_4090
+from benchmarks.common import Emitter, class_times, cost_for
+
+
+def run(em: Emitter) -> None:
+    ssm_shares = []
+    for seq in (1024, 4096, 8192):
+        ct = class_times(cost_for("mamba-130m", "prefill", seq),
+                         JETSON_ORIN_NANO)
+        tot = sum(ct.values()) or 1.0
+        share = ct.get("ssm", 0) / tot
+        ssm_shares.append(share)
+        ssm_gemm = (ct.get("ssm", 0) + ct.get("gemm", 0)) / tot
+        em.emit(f"fig9.edge.mamba-130m.s{seq}", tot * 1e6,
+                f"ssm={100 * share:.0f}%_ssm+gemm={100 * ssm_gemm:.0f}%")
+    em.emit("fig9.claim.edge_ssm_over_55pct",
+            100 * min(ssm_shares),
+            f"min_share={100 * min(ssm_shares):.0f}%_paper>55%")
+    # transformer GEMM share: consumer vs edge at 1024
+    c = class_times(cost_for("qwen2.5-0.5b", "prefill", 1024), RTX_4090)
+    e = class_times(cost_for("qwen2.5-0.5b", "prefill", 1024),
+                    JETSON_ORIN_NANO)
+    gc = c.get("gemm", 0) / (sum(c.values()) or 1)
+    ge = e.get("gemm", 0) / (sum(e.values()) or 1)
+    em.emit("fig9.claim.transformer_gemm_share_drops_on_edge",
+            100 * ge, f"consumer={100 * gc:.0f}%_edge={100 * ge:.0f}%_"
+            f"drops={'yes' if ge < gc else 'no'}")

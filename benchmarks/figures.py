@@ -1,0 +1,81 @@
+"""Render the paper's figures as ASCII charts into benchmarks/results/figures.md
+(the open-source characterization tool's report output).
+
+  PYTHONPATH=src python -m benchmarks.figures
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core.config import JETSON_ORIN_NANO, RTX_4090
+from repro.core.memmodel import inference_memory
+from repro.core.registry import get
+from benchmarks.common import RESULTS_DIR, class_times, cost_for, time_on
+
+BAR = 46
+ORDER = ("ssm", "gemm", "norm", "arith", "memory", "other")
+
+
+def _bar(frac: float, width: int = BAR) -> str:
+    n = int(round(frac * width))
+    return "█" * n + "·" * (width - n)
+
+
+def fig1(lines):
+    lines.append("\n## Fig. 1 — TTFT scaling (RTX 4090 time model)\n```")
+    for seq in (1024, 4096, 8192, 16384, 32768):
+        tq = time_on(cost_for("qwen2.5-0.5b", "prefill", seq), RTX_4090)
+        tm = time_on(cost_for("mamba2-780m", "prefill", seq), RTX_4090)
+        top = max(tq, tm)
+        lines.append(f"S={seq:>6}  qwen2.5-0.5b {_bar(tq / top, 30)} {tq * 1e3:8.1f} ms")
+        lines.append(f"          mamba2-780m  {_bar(tm / top, 30)} {tm * 1e3:8.1f} ms")
+    lines.append("```")
+
+
+def fig5(lines):
+    lines.append("\n## Fig. 5 — memory footprint at context length (24 GB budget)\n```")
+    for model in ("qwen2.5-0.5b", "zamba2-1.2b", "falcon-h1-0.5b",
+                  "mamba2-780m"):
+        cfg = get(model)
+        row = [f"{model:16s}"]
+        for seq in (8192, 32768, 65536, 131072):
+            gb = inference_memory(cfg, 1, seq).total / 1e9
+            row.append(f"{'OOM' if gb > 24 else f'{gb:5.1f}G':>7}")
+        lines.append(" ".join(row) + "   (S=8K/32K/64K/128K)")
+    lines.append("```")
+
+
+def fig7(lines, model: str, hw, title: str):
+    lines.append(f"\n## {title}\n```")
+    for seq in (1024, 4096, 16384):
+        ct = class_times(cost_for(model, "prefill", seq), hw)
+        tot = sum(ct.values()) or 1.0
+        segs = []
+        for c in ORDER:
+            share = ct.get(c, 0.0) / tot
+            if share > 0.005:
+                segs.append(f"{c}:{100 * share:.0f}%")
+        lines.append(f"S={seq:>6}  {_bar(ct.get('ssm', 0) / tot)}  " + " ".join(segs))
+    lines.append("```  (bar = SSM-class share)")
+
+
+def run(em=None) -> None:
+    lines = ["# Characterization figures (ASCII render)", ""]
+    fig1(lines)
+    fig5(lines)
+    fig7(lines, "mamba-130m", RTX_4090,
+         "Fig. 7a — Mamba-1 130m operator classes (consumer)")
+    fig7(lines, "mamba2-130m", RTX_4090,
+         "Fig. 7b — Mamba-2 130m operator classes (consumer)")
+    fig7(lines, "mamba-130m", JETSON_ORIN_NANO,
+         "Fig. 9a — Mamba-1 130m operator classes (edge)")
+    fig7(lines, "zamba2-1.2b", RTX_4090,
+         "Fig. 8a — Zamba2-1.2B operator classes (consumer)")
+    out = os.path.join(RESULTS_DIR, "figures.md")
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Kernel-level benchmarks.
+
+1. Chunked-dual SSD vs sequential scan: the paper's core operator insight
+   (hardware-aware reformulation) measured as real CPU wall-clock — the
+   chunked form's matmul structure wins on any hardware with dense units.
+2. VMEM working-set check for the Pallas SSD kernel block shapes (static).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ref import ssd_chunked_ref, ssd_sequential
+from benchmarks.common import Emitter, wall_time
+
+VMEM_BYTES = 128 * 1024 * 1024   # v5e VMEM per core ~128MB usable window
+
+
+def run(em: Emitter) -> None:
+    key = jax.random.PRNGKey(0)
+    b, s, h, p, g, n = 1, 4096, 8, 64, 1, 64
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, g, n))
+    Cm = jax.random.normal(ks[4], (b, s, g, n))
+    D = jax.random.normal(ks[5], (h,))
+    f_seq = jax.jit(lambda *a: ssd_sequential(*a)[0])
+    f_chk = jax.jit(lambda *a: ssd_chunked_ref(*a, chunk=128)[0])
+    t_seq = wall_time(f_seq, x, dt, A, Bm, Cm, D)
+    t_chk = wall_time(f_chk, x, dt, A, Bm, Cm, D)
+    em.emit("kernel.ssd.sequential.s4096", t_seq * 1e6, "")
+    em.emit("kernel.ssd.chunked.s4096", t_chk * 1e6,
+            f"speedup={t_seq / t_chk:.1f}x_over_sequential")
+    # Pallas SSD kernel block working set (chunk=128, P=64, N=128):
+    chunk, pp, nn = 128, 64, 128
+    ws = (chunk * pp + 2 * chunk * nn + chunk * 1 + chunk * chunk
+          + pp * nn) * 4
+    em.emit("kernel.ssd.vmem_working_set", ws,
+            f"{ws / 1024:.0f}KB_fits_vmem={'yes' if ws < VMEM_BYTES else 'no'}")
+    # flash kernel block (bq=bk=512, d=128): q,k,v,scores f32 + acc
+    bq = bk = 512
+    d = 128
+    ws2 = (bq * d + 2 * bk * d + bq * bk + bq * d) * 4
+    em.emit("kernel.flash.vmem_working_set", ws2,
+            f"{ws2 / 1024:.0f}KB_fits_vmem={'yes' if ws2 < VMEM_BYTES else 'no'}")

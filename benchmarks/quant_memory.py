@@ -1,0 +1,40 @@
+"""Paper Sec. III-C: quantization effect (Quamba2 W4A8 on Mamba2-780m).
+
+Claims: 3.5x weight reduction (1488 -> 424 MB); 1.26x TTFT and 1.5x TPOT
+speedup at 65K prefill on the RTX 4090."""
+from __future__ import annotations
+
+from repro.core.config import RTX_4090
+from repro.core.memmodel import weight_bytes
+from repro.core.registry import get
+from benchmarks.common import Emitter, cost_for
+
+
+def _time_scaled(cost, hw, wbytes_scale: float) -> float:
+    """W4A8 roofline: weight-stream bytes shrink ~3.5x; compute on int8
+    paths ~2x bf16 throughput for GEMM kernels."""
+    t = 0.0
+    for k in cost["kernels"]:
+        byts = k["bytes"] * (wbytes_scale if k["clazz"] == "gemm" else 1.0)
+        flops_rate = hw.peak_flops * (2.0 if k["clazz"] == "gemm" else 1.0)
+        t += max(k["flops"] / flops_rate, byts / hw.hbm_bw)
+    return t
+
+
+def run(em: Emitter) -> None:
+    cfg = get("mamba2-780m")
+    w16 = weight_bytes(cfg, 2)
+    w4 = int(cfg.param_count() * 0.57)   # 4-bit + scales/zeros + a few 8-bit
+    em.emit("quant.weights.bf16", w16 / 1e6, f"paper=1488MB")
+    em.emit("quant.weights.w4a8", w4 / 1e6,
+            f"paper=424MB_ratio={w16 / w4:.2f}x_paper=3.5x")
+    c = cost_for("mamba2-780m", "prefill", 65536)
+    t_bf16 = _time_scaled(c, RTX_4090, 1.0)
+    t_w4 = _time_scaled(c, RTX_4090, 0.285)
+    em.emit("quant.ttft65k.speedup", t_bf16 / t_w4 * 100,
+            f"paper=1.26x_model={t_bf16 / t_w4:.2f}x")
+    cd = cost_for("mamba2-780m", "decode", 65536)
+    d_bf16 = _time_scaled(cd, RTX_4090, 1.0)
+    d_w4 = _time_scaled(cd, RTX_4090, 0.285)
+    em.emit("quant.tpot65k.speedup", d_bf16 / d_w4 * 100,
+            f"paper=1.5x_model={d_bf16 / d_w4:.2f}x")

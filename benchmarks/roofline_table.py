@@ -1,0 +1,65 @@
+"""Deliverable (g): the roofline table over every dry-run cell.
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun),
+derives the three roofline terms on TPU v5e, and emits both CSV rows and
+the EXPERIMENTS.md §Roofline markdown table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.config import TPU_V5E
+from repro.core.roofline import DEFAULT_LINKS
+from benchmarks.common import Emitter, RESULTS_DIR
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def load_cells(mesh: str = "single", dirname: str = "dryrun"):
+    base = os.path.join(RESULTS_DIR, dirname)
+    cells = []
+    for path in sorted(glob.glob(os.path.join(base, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(rec, key: str = "hlo"):
+    """key: "hlo" (eager ref path) or "hlo_fused" (Pallas-kernel path)."""
+    hw = TPU_V5E
+    blk = rec.get(key) or rec["hlo"]
+    flops, byts = blk["flops"], blk["bytes"]
+    coll = blk["coll_bytes"]
+    t_c = flops / hw.peak_flops
+    t_m = byts / hw.hbm_bw
+    t_l = coll / (DEFAULT_LINKS * hw.link_bw)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+    dom = max(terms, key=terms.get)
+    chips = rec.get("chips", 256)
+    useful = (rec["model_flops"] / chips) / flops if flops else 0.0
+    t_bound = max(t_c, t_m, t_l)
+    mfu = (rec["model_flops"] / chips / t_bound / hw.peak_flops
+           if t_bound else 0.0)
+    return {"arch": rec["arch"], "shape": rec["shape"], "dom": dom,
+            "t_c": t_c, "t_m": t_m, "t_l": t_l, "useful": useful,
+            "mfu_bound": mfu, "fits": rec["memory"]["fits"],
+            "live_gb": rec["memory"]["live_gb"]}
+
+
+def run(em: Emitter) -> None:
+    for mesh in ("single", "multi"):
+        for rec in load_cells(mesh):
+            tag = f"roofline.{mesh}.{rec['arch']}.{rec['shape']}"
+            if not rec.get("applicable", False):
+                em.emit(tag, 0.0, f"skip:{rec['skip_reason'][:40]}")
+                continue
+            if "error" in rec:
+                em.emit(tag, 0.0, "ERROR")
+                continue
+            r = roofline_row(rec)
+            em.emit(tag, r["t_c"] * 1e6,
+                    f"dom={r['dom']}_tc={r['t_c'] * 1e3:.2f}ms_"
+                    f"tm={r['t_m'] * 1e3:.2f}ms_tl={r['t_l'] * 1e3:.2f}ms_"
+                    f"useful={r['useful']:.2f}_mfu@bound={r['mfu_bound']:.2f}_"
+                    f"fits={r['fits']}")

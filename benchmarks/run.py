@@ -1,0 +1,61 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (and saves it under
+benchmarks/results/bench.csv).  Run:  PYTHONPATH=src python -m benchmarks.run
+Optionally:  python -m benchmarks.run --only fig5,fig7
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import Emitter, RESULTS_DIR  # noqa: E402
+
+MODULES = [
+    ("fig1", "benchmarks.fig1_ttft_tpot"),
+    ("fig1m", "benchmarks.fig1_measured"),
+    ("fig3", "benchmarks.fig3_frontier"),
+    ("fig5", "benchmarks.fig5_memory"),
+    ("fig6", "benchmarks.fig6_energy"),
+    ("fig7", "benchmarks.fig7_op_breakdown"),
+    ("fig8", "benchmarks.fig8_hybrid_breakdown"),
+    ("fig9", "benchmarks.fig9_cross_device"),
+    ("quant", "benchmarks.quant_memory"),
+    ("table2", "benchmarks.table2_suite"),
+    ("kernel", "benchmarks.kernel_bench"),
+    ("roofline", "benchmarks.roofline_table"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated prefixes, e.g. fig5,fig7")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    em = Emitter()
+    failures = []
+    for name, modpath in MODULES:
+        if only and name not in only:
+            continue
+        try:
+            mod = __import__(modpath, fromlist=["run"])
+            mod.run(em)
+        except Exception:
+            failures.append(name)
+            print(f"[bench {name} FAILED]\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    em.save(os.path.join(RESULTS_DIR, "bench.csv"))
+    if failures:
+        print(f"FAILED benches: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

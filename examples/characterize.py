@@ -1,0 +1,37 @@
+"""The paper's end-to-end characterization flow (Fig. 4) as a script:
+sweep sequence lengths for a Transformer vs an SSM, report the memory
+frontier, TTFT model, and operator breakdown — the Fig. 1/5/7 story.
+
+  PYTHONPATH=src python examples/characterize.py
+"""
+import sys
+
+sys.path.insert(0, "benchmarks")
+sys.path.insert(0, ".")
+
+from benchmarks.common import class_times, cost_for, time_on  # noqa: E402
+from repro.core.config import RTX_4090                         # noqa: E402
+from repro.core.memmodel import inference_memory, max_seq_len  # noqa: E402
+from repro.core.registry import get                            # noqa: E402
+
+TF, SSM = "qwen2.5-0.5b", "mamba2-780m"
+
+print(f"{'seq':>8} | {'TTFT ' + TF:>18} | {'TTFT ' + SSM:>18} | winner")
+for seq in (1024, 4096, 16384, 32768):
+    t1 = time_on(cost_for(TF, "prefill", seq), RTX_4090)
+    t2 = time_on(cost_for(SSM, "prefill", seq), RTX_4090)
+    w = TF if t1 < t2 else SSM
+    print(f"{seq:>8} | {t1 * 1e3:>15.1f}ms | {t2 * 1e3:>15.1f}ms | {w}")
+
+print("\nmemory @32K:",
+      f"{TF}: {inference_memory(get(TF), 1, 32768).total / 1e9:.2f} GB,",
+      f"{SSM}: {inference_memory(get(SSM), 1, 32768).total / 1e9:.2f} GB")
+print("OOM frontier (24GB):",
+      f"{TF}: {max_seq_len(get(TF), 24e9):,},",
+      f"{SSM}: {max_seq_len(get(SSM), 24e9):,}")
+
+print(f"\noperator-class shares for {SSM} @16K (RTX 4090):")
+ct = class_times(cost_for(SSM, "prefill", 16384), RTX_4090)
+tot = sum(ct.values())
+for k, v in sorted(ct.items(), key=lambda kv: -kv[1]):
+    print(f"  {k:12s} {100 * v / tot:5.1f}%")

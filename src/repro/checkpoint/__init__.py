@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import (  # noqa: F401
+    AsyncCheckpointer, latest_step, restore, save,
+)

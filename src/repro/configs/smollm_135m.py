@@ -1,0 +1,19 @@
+"""smollm-135m — llama-architecture small model.
+[hf:HuggingFaceTB/SmolLM-135M; hf]  30L d_model=576 9H (kv=3) d_ff=1536
+vocab=49152.  9 heads don't divide the model axis → sequence-sharded
+attention; the model axis still shards ff and vocab."""
+from repro.core.config import AttnConfig, ModelConfig
+from repro.core.registry import register
+
+CONFIG = register(ModelConfig(
+    name="smollm-135m",
+    family="dense",
+    n_layers=30,
+    d_model=576,
+    d_ff=1536,
+    vocab_size=49152,
+    attn=AttnConfig(n_heads=9, n_kv_heads=3, head_dim=64,
+                    rope_theta=10_000.0),
+    layer_pattern=("dense",),
+    tie_embeddings=True,
+), tags=("assigned", "dense"))

@@ -1,0 +1,16 @@
+"""Operator taxonomy re-exports (classification lives with the HLO parser).
+
+Paper Sec. II-C: GEMM | non-GEMM{memory, arith, norm} | SSM-specific, plus
+collectives (a distributed-runtime class the paper's single-GPU study does
+not need, reported separately here).
+"""
+from repro.core.hlo_analysis import (  # noqa: F401
+    ARITH_OPS, COLLECTIVE_OPS, MEMORY_OPS, NORM_SCOPES, SSM_SCOPES,
+)
+
+CLASSES = ("gemm", "ssm", "memory", "arith", "norm", "collective", "other")
+
+# Display order mirrors the paper's stacked bars (SSM at the bottom,
+# then GEMM, then non-GEMM sorted by contribution).
+DISPLAY_ORDER = ("ssm", "gemm", "norm", "arith", "memory", "collective",
+                 "other")

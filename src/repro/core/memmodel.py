@@ -1,0 +1,140 @@
+"""Analytic inference-memory model + OOM frontier (paper Fig. 5, eqs. 2-3).
+
+  weights      = N_params × p
+  KV cache     = B × S × Σ_attn-layers (2 × n_kv × head_dim) × p   (eq. 2, GQA-aware)
+  SSM state    = B × Σ_ssm-layers (H×P×N × 4 + conv window)         (constant in S)
+  activations  ≈ B × S × D × C × p                                  (eq. 3)
+
+The paper measures peak reserved memory under the HF pipeline; we model the
+same quantities plus a configurable framework-overhead fraction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.core.config import ModelConfig
+
+# Paper Sec. II-B: "C: number of layers to keep their activations on memory".
+DEFAULT_ACT_LAYERS = 2
+# Allocator/framework overhead fraction observed with eager HF pipelines.
+DEFAULT_OVERHEAD = 0.08
+
+
+def weight_bytes(cfg: ModelConfig, p: int = 2) -> int:
+    return cfg.param_count() * p
+
+
+def kv_cache_bytes(cfg: ModelConfig, batch: int, seq: int, p: int = 2) -> int:
+    total = 0
+    a = cfg.attn
+    for kind in cfg.layer_kinds:
+        if kind in ("dense", "moe", "dense_moe", "encoder"):
+            total += 2 * batch * seq * a.n_kv_heads * a.head_dim * p
+        elif kind == "local":
+            s_eff = min(seq, a.sliding_window or seq)
+            total += 2 * batch * s_eff * a.n_kv_heads * a.head_dim * p
+        elif kind == "mamba2+shared" and cfg.shared_attn is not None:
+            sa = cfg.shared_attn
+            total += 2 * batch * seq * sa.n_kv_heads * sa.head_dim * p
+    return total
+
+
+def ssm_state_bytes(cfg: ModelConfig, batch: int, p_state: int = 4,
+                    p: int = 2) -> int:
+    if cfg.ssm is None:
+        return 0
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    total = 0
+    for kind in cfg.layer_kinds:
+        if kind in ("mamba2", "mamba2+shared"):
+            nh = s.n_ssm_heads(cfg.d_model)
+            conv_dim = di + 2 * s.n_groups * s.d_state
+            total += batch * (nh * s.headdim * s.d_state * p_state
+                              + (s.conv_kernel - 1) * conv_dim * p)
+        elif kind == "mamba1":
+            total += batch * (di * s.d_state * p_state
+                              + (s.conv_kernel - 1) * di * p)
+    return total
+
+
+def activation_bytes(cfg: ModelConfig, batch: int, seq: int, p: int = 2,
+                     c_layers: int = DEFAULT_ACT_LAYERS,
+                     logits_mode: Optional[str] = None,
+                     eager_attention: bool = False) -> int:
+    """eq. 3 + the two buffers that actually set the paper's OOM frontier:
+
+    * full-sequence logits — the HF pipeline materializes [B, S, V] at
+      prefill (≈304 KB/token for Qwen2.5's 152K vocab!); the official
+      mamba_ssm runtime computes last-token logits only (num_last_tokens=1).
+      Default: "full" for attention-bearing (HF-served) families, "last"
+      for pure SSM.
+    * eager attention scores — [B, H, S, S] f32 (×2 for the softmax copy)
+      for models running without FlashAttention (paper: Phi-3's classical
+      decoder OOMs between 4K and 8K on 24 GB exactly because of this).
+    """
+    act = batch * seq * cfg.d_model * c_layers * p
+    if logits_mode is None:
+        logits_mode = "last" if cfg.family == "ssm" else "full"
+    if logits_mode == "full":
+        logits = batch * seq * cfg.padded_vocab * p
+    else:
+        logits = batch * cfg.padded_vocab * 4
+    scores = 0
+    if eager_attention and cfg.attn is not None:
+        scores = 2 * batch * cfg.attn.n_heads * seq * seq * 4
+    return act + logits + scores
+
+
+@dataclass
+class MemoryBreakdown:
+    weights: int
+    kv_cache: int
+    ssm_state: int
+    activations: int
+    overhead: int
+
+    @property
+    def total(self) -> int:
+        return (self.weights + self.kv_cache + self.ssm_state
+                + self.activations + self.overhead)
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"weights": self.weights, "kv_cache": self.kv_cache,
+                "ssm_state": self.ssm_state, "activations": self.activations,
+                "overhead": self.overhead, "total": self.total}
+
+
+def inference_memory(cfg: ModelConfig, batch: int, seq: int, p: int = 2,
+                     overhead_frac: float = DEFAULT_OVERHEAD,
+                     logits_mode: Optional[str] = None,
+                     eager_attention: bool = False) -> MemoryBreakdown:
+    w = weight_bytes(cfg, p)
+    kv = kv_cache_bytes(cfg, batch, seq, p)
+    ssm = ssm_state_bytes(cfg, batch, p=p)
+    act = activation_bytes(cfg, batch, seq, p, logits_mode=logits_mode,
+                           eager_attention=eager_attention)
+    ovh = int((w + kv + ssm + act) * overhead_frac)
+    return MemoryBreakdown(w, kv, ssm, act, ovh)
+
+
+def max_seq_len(cfg: ModelConfig, capacity_bytes: float, batch: int = 1,
+                p: int = 2, hi: int = 1 << 22,
+                logits_mode: Optional[str] = None,
+                eager_attention: bool = False) -> int:
+    """OOM frontier: largest prefill length fitting in ``capacity_bytes``."""
+    def fits(s):
+        return inference_memory(
+            cfg, batch, s, p, logits_mode=logits_mode,
+            eager_attention=eager_attention).total <= capacity_bytes
+    if not fits(1):
+        return 0
+    lo, h = 1, hi
+    while lo < h:
+        mid = (lo + h + 1) // 2
+        if fits(mid):
+            lo = mid
+        else:
+            h = mid - 1
+    return lo

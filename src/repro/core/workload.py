@@ -1,0 +1,85 @@
+"""Workload → model-input specs (ShapeDtypeStructs; never allocates).
+
+Modality stubs per the assignment: [audio] archs take precomputed frame
+embeddings, [vlm] archs take precomputed patch embeddings alongside tokens.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, WorkloadConfig
+
+VLM_PATCHES = 576          # llava-next: 24x24 patch grid per image
+VLM_FEAT_DIM = 1024        # CLIP-L vision features
+AUDIO_FEAT_DIM = 512       # wav2vec2/hubert conv-extractor features
+
+
+def input_specs(cfg: ModelConfig, wl: WorkloadConfig) -> Dict[str, Any]:
+    """Specs for the *model inputs* of the step lowered for this workload.
+
+    train:   full-sequence inputs + labels
+    prefill: full-sequence inputs
+    decode:  one-token inputs (the KV/state cache is built separately via
+             ``cache_specs``)
+    """
+    b, s = wl.global_batch, wl.seq_len
+    tok = jnp.int32
+    if wl.kind == "decode":
+        if cfg.frontend == "audio":
+            raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), tok)}
+    if cfg.frontend == "audio":
+        specs = {"features": jax.ShapeDtypeStruct((b, s, AUDIO_FEAT_DIM),
+                                                  jnp.bfloat16)}
+        if wl.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), tok)
+        return specs
+    if cfg.frontend == "vision":
+        s_text = s - VLM_PATCHES
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s_text), tok),
+            "features": jax.ShapeDtypeStruct((b, VLM_PATCHES, VLM_FEAT_DIM),
+                                             jnp.bfloat16),
+        }
+        if wl.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), tok)
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), tok)}
+    if wl.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), tok)
+    return specs
+
+
+def realize(specs, seed: int = 0):
+    """Materialize concrete arrays for smoke tests / examples."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, sd in specs.items():
+        key, k = jax.random.split(key)
+        if jnp.issubdtype(sd.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, sd.shape, 0, 100, sd.dtype)
+        else:
+            out[name] = jax.random.normal(k, sd.shape, sd.dtype)
+    return out
+
+
+def applicable(cfg: ModelConfig, wl: WorkloadConfig) -> Tuple[bool, str]:
+    """Assignment rules: encoder-only archs skip decode; long_500k requires
+    sub-quadratic attention."""
+    if cfg.family in ("encoder", "audio") and wl.kind == "decode":
+        return False, "encoder-only: no decode step"
+    if wl.name == "long_500k":
+        kinds = set(cfg.layer_kinds)
+        full_attn = kinds & {"dense", "moe", "dense_moe", "encoder"}
+        sub_quadratic = kinds & {"mamba2", "mamba1", "mamba2+shared", "local"}
+        if not sub_quadratic:
+            return False, "pure full-attention arch: long_500k skipped"
+        if full_attn and "local" not in kinds:
+            return False, ("full-attention layers present: long_500k skipped "
+                           "(quadratic prefill history)")
+        # local:global archs (gemma3) run: decode is linear per step and the
+        # global-layer KV cache is sequence-sharded.
+    return True, ""

@@ -1,0 +1,70 @@
+"""Collective-communication helpers and overlap utilities.
+
+GSPMD inserts the collectives; this module provides (a) einsum wrappers
+whose sharding constraints steer XLA toward overlap-friendly schedules
+(reduce-scatter instead of all-reduce, split-S decode attention), and
+(b) analytic wire-cost models used by the roofline and the hillclimb
+napkin math.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def tp_matmul_rs(x: jax.Array, w: jax.Array,
+                 out_axes: Sequence[Optional[str]]) -> jax.Array:
+    """Tensor-parallel matmul whose partial sums leave as a reduce-scatter
+    (sequence-parallel exit) instead of an all-reduce: constrain the result
+    to the sequence-sharded layout and GSPMD lowers psum -> reduce-scatter.
+
+    x: [B, S, K/tp] (contracted dim sharded); w: [K/tp, M].
+    """
+    y = jnp.einsum("bsk,km->bsm", x, w)
+    return constrain(y, tuple(out_axes))
+
+
+@dataclass(frozen=True)
+class WireCost:
+    """Ring-algorithm wire bytes per device for a collective over n ranks."""
+    n: int
+    link_bw: float = 50e9
+    links: int = 4
+
+    def all_reduce(self, nbytes: float) -> float:
+        return 2.0 * nbytes * (self.n - 1) / self.n
+
+    def all_gather(self, out_bytes: float) -> float:
+        return out_bytes * (self.n - 1) / self.n
+
+    def reduce_scatter(self, in_bytes: float) -> float:
+        return in_bytes * (self.n - 1) / self.n
+
+    def all_to_all(self, in_bytes: float) -> float:
+        return in_bytes * (self.n - 1) / self.n
+
+    def time(self, wire_bytes: float) -> float:
+        return wire_bytes / (self.links * self.link_bw)
+
+
+def overlap_headroom(t_compute: float, t_collective: float) -> float:
+    """Fraction of the collective time hidable behind compute (the
+    latency-hiding scheduler budget): 1.0 = fully hidden."""
+    if t_collective <= 0:
+        return 1.0
+    return min(1.0, t_compute / t_collective)
+
+
+def grad_reduce_dtype_saving(param_bytes_f32: float, n_data: int,
+                             compressed: bool = True) -> Tuple[float, float]:
+    """Wire bytes of the DP gradient reduce-scatter with/without bf16
+    gradient compression (the OptConfig.grad_dtype knob)."""
+    wc = WireCost(n_data)
+    full = wc.reduce_scatter(param_bytes_f32)
+    comp = wc.reduce_scatter(param_bytes_f32 / 2)
+    return full, comp if compressed else full

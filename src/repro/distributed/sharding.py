@@ -1,0 +1,252 @@
+"""Logical-axis sharding rules and the per-(arch × workload × mesh) plan.
+
+Everything in the model code is written with *logical* axis names
+("batch", "seq", "heads", "ff", "experts", ...).  A :class:`ShardingPlan`
+maps logical axes to mesh axes for one (ModelConfig, WorkloadConfig, Mesh)
+cell, deciding between head-sharded and sequence-sharded attention, the
+expert-parallel layout, KV-head replication, and ZeRO-1 optimizer sharding.
+
+GSPMD keeps global semantics: the model code never changes, only the rules.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.config import ModelConfig, WorkloadConfig
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_CTX = threading.local()
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a sharding constraint from logical axes, if a plan is active."""
+    plan: Optional[ShardingPlan] = getattr(_CTX, "plan", None)
+    if plan is None:
+        return x
+    spec = plan.spec(tuple(axes), x.shape, activation=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(plan.mesh, spec))
+
+
+class _Activation:
+    def __init__(self, plan):
+        self.plan = plan
+
+    def __enter__(self):
+        self.prev = getattr(_CTX, "plan", None)
+        _CTX.plan = self.plan
+        return self.plan
+
+    def __exit__(self, *exc):
+        _CTX.plan = self.prev
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+@dataclass
+class ShardingPlan:
+    mesh: Mesh
+    param_rules: Dict[str, MeshAxes]
+    act_rules: Dict[str, MeshAxes]
+    kv_repeat: int = 1
+    moe_groups: int = 1
+    attn_mode: str = "head"         # "head" | "seq"
+    notes: Tuple[str, ...] = ()
+
+    # ---- spec construction -------------------------------------------------
+    def spec(self, axes: Sequence[Optional[str]], shape: Sequence[int],
+             activation: bool = False) -> P:
+        rules = self.act_rules if activation else self.param_rules
+        used: set = set()
+        parts = []
+        for dim, name in zip(shape, axes):
+            mapped = rules.get(name) if name is not None else None
+            if mapped is None:
+                parts.append(None)
+                continue
+            maxes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+            maxes = tuple(a for a in maxes if a not in used)
+            size = _axis_size(self.mesh, maxes)
+            if size <= 1 or dim % size != 0:
+                # try a prefix of the axes that divides
+                while maxes and (dim % _axis_size(self.mesh, maxes) != 0):
+                    maxes = maxes[:-1]
+                if not maxes:
+                    parts.append(None)
+                    continue
+            used.update(maxes)
+            parts.append(maxes[0] if len(maxes) == 1 else maxes)
+        return P(*parts)
+
+    def named(self, axes: Sequence[Optional[str]], shape: Sequence[int],
+              activation: bool = False) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes, shape, activation))
+
+    def params_sharding(self, axes_tree, shapes_tree):
+        return jax.tree_util.tree_map(
+            lambda ax, sh: self.named(ax, sh),
+            axes_tree, shapes_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x))
+
+    def activations(self) -> _Activation:
+        return _Activation(self)
+
+    @property
+    def data_size(self) -> int:
+        return _axis_size(self.mesh, self.act_rules.get("batch"))
+
+    @property
+    def model_size(self) -> int:
+        return _axis_size(self.mesh, self.param_rules.get("ff"))
+
+
+def _batch_axes(mesh: Mesh, global_batch: int) -> MeshAxes:
+    """Pick the largest prefix of (pod, data) that divides the batch."""
+    cand = [a for a in ("pod", "data") if a in mesh.shape]
+    while cand and global_batch % _axis_size(mesh, tuple(cand)) != 0:
+        cand.pop()
+    return tuple(cand) if cand else None
+
+
+def plan_sharding(cfg: ModelConfig, wl: WorkloadConfig, mesh: Mesh,
+                  microbatches: int = 1,
+                  sequence_parallel: bool = False) -> ShardingPlan:
+    model = "model" if "model" in mesh.shape else None
+    model_size = mesh.shape.get("model", 1)
+    notes = []
+
+    # ---- attention mode ----------------------------------------------------
+    kv_repeat, attn_mode = 1, "head"
+    if cfg.attn is not None and model is not None:
+        H, KV = cfg.attn.n_heads, cfg.attn.n_kv_heads
+        if H % model_size == 0 and model_size % KV == 0:
+            kv_repeat = model_size // KV
+            attn_mode = "head"
+        elif H % model_size == 0 and KV % model_size == 0:
+            kv_repeat, attn_mode = 1, "head"
+        else:
+            attn_mode = "seq"
+            notes.append(f"heads ({H}/{KV}) not divisible by model={model_size}: "
+                         "sequence-sharded attention")
+
+    batch = _batch_axes(mesh, wl.global_batch)
+    if batch is None:
+        notes.append(f"global_batch={wl.global_batch} < data-parallel size: "
+                     "batch replicated (long-context single-stream cell)")
+
+    # sequence sharding: in seq attention mode (or batch-replicated decode),
+    # put seq / kv_seq on the model axis (context parallelism).
+    seq_axes: MeshAxes = None
+    kv_seq_axes: MeshAxes = None
+    if attn_mode == "seq":
+        seq_axes = model
+        kv_seq_axes = model
+    # KV caches store exact (unreplicated) kv heads; when those can't shard
+    # over the model axis, shard the cache's sequence dim instead.
+    if (cfg.attn is not None and model is not None
+            and cfg.attn.n_kv_heads % model_size != 0):
+        kv_seq_axes = model
+    if batch is None and cfg.attn is not None:
+        # single-stream decode: shard the KV cache over data too
+        if attn_mode == "seq":
+            kv_seq_axes = ("data", "model") if "data" in mesh.shape else model
+
+    heads_axes = model if attn_mode == "head" else None
+
+    fsdp_axes: MeshAxes = None
+    if getattr(cfg, "fsdp", False) and "data" in mesh.shape:
+        fsdp_axes = "data"
+        notes.append("FSDP: params' d_model dim sharded over data (ZeRO-3)")
+
+    param_rules: Dict[str, MeshAxes] = {
+        "embed": fsdp_axes,
+        "layers": None,
+        "heads": heads_axes,
+        "kv_heads": heads_axes,
+        "ff": model,
+        "vocab": model,
+        "ssm_heads": model,
+        "conv_dim": model,
+        "ssm_groups": None,
+        "dstate": None,
+        "experts": ("pod", "data") if "pod" in mesh.shape else "data",
+        "expert_ff": model,
+        "dt_rank": None,
+    }
+    act_rules: Dict[str, MeshAxes] = {
+        "batch": batch,
+        "seq": seq_axes,
+        "kv_seq": kv_seq_axes,
+        "heads": heads_axes,
+        "kv_heads": heads_axes,
+        "embed": None,
+        "ff": model,
+        "vocab": model,
+        "ssm_heads": model,
+        "conv_dim": model,
+        # dispatch/combine (token-major) shard experts on the model axis;
+        # ex_in/ex_out (expert-major) shard experts on the data axis — the
+        # reshard between them is the EP all-to-all.  Capacity rows TP-shard.
+        "experts": model,
+        "experts_ep": ("pod", "data") if "pod" in mesh.shape else "data",
+        "expert_cap": model,
+        "groups": batch,
+        "dstate": None,
+        # Megatron-style sequence parallelism: the residual stream (and the
+        # norms/adds on it) lives sequence-sharded on the model axis; TP
+        # blocks gather on entry / reduce-scatter on exit.  Enabled by
+        # sequence_parallel=True (beyond-paper optimization).
+        "residual_seq": None,
+    }
+
+    if attn_mode == "seq":
+        # seq-mode archs already live sequence-sharded: the residual
+        # constraint must preserve that layout, not pin replication.
+        act_rules["residual_seq"] = model
+    if sequence_parallel and attn_mode == "head" and model is not None:
+        act_rules["residual_seq"] = model
+        notes.append("sequence-parallel residual stream (RS/AG instead of AR)")
+
+    moe_groups = 1
+    if cfg.moe is not None:
+        # group size ~4K tokens bounds the [G,Tg,E,C] dispatch working set
+        # (GShard sizing); groups stay a multiple of the batch shards.
+        bsz = _axis_size(mesh, batch) if batch else 1
+        tokens = wl.tokens // max(microbatches, 1)
+        g = max(bsz, tokens // 4096)
+        g = min(g, tokens)
+        while g > bsz and (tokens % g or g % max(bsz, 1)):
+            g -= 1
+        moe_groups = max(g, 1)
+
+    return ShardingPlan(mesh=mesh, param_rules=param_rules, act_rules=act_rules,
+                        kv_repeat=kv_repeat, moe_groups=moe_groups,
+                        attn_mode=attn_mode, notes=tuple(notes))
+
+
+def zero1_rules(plan: ShardingPlan) -> ShardingPlan:
+    """Optimizer-state plan: like params but with 'data' added to the
+    replicated logical axes (ZeRO-1 partitioning of m/v/master weights)."""
+    rules = dict(plan.param_rules)
+    # shard the embedding/e.g. d_model dim of optimizer state over data
+    rules["embed"] = "data"
+    rules["layers"] = None
+    out = ShardingPlan(mesh=plan.mesh, param_rules=rules,
+                       act_rules=plan.act_rules, kv_repeat=plan.kv_repeat,
+                       moe_groups=plan.moe_groups, attn_mode=plan.attn_mode,
+                       notes=plan.notes + ("zero1",))
+    return out

@@ -1,0 +1,1 @@
+from repro.kernels.attn_decode.ops import decode_attention  # noqa: F401

@@ -1,0 +1,94 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+Memory-bound by design (the paper's decode-phase bottleneck): each KV block
+is streamed HBM->VMEM exactly once; the GQA query group [G, d] stays
+resident; (m, l, acc) carried in VMEM scratch over sequential KV blocks.
+The valid-length mask supports partially-filled caches.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                   bs: int, ns: int, scale: float):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    valid = len_ref[pl.program_id(0)]
+    run = si * bs < valid
+
+    @pl.when(run)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)            # [G, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bs, d]
+        v = v_ref[0, 0].astype(jnp.float32)            # [bs, d]
+        s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = si * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < valid, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_s[...] = m_new
+        acc_s[...] = (acc_s[...] * corr
+                      + jax.lax.dot(p.astype(v.dtype), v,
+                                    preferred_element_type=jnp.float32))
+
+    @pl.when(si == ns - 1)
+    def _():
+        o_ref[0, 0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-37)
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, *, valid_len, block_s: int = 1024,
+                            interpret: bool = False) -> jax.Array:
+    """q: [B, H, d]; k, v: [B, KVH, S, d]; valid_len: scalar or [B]."""
+    b, h, d = q.shape
+    kvh, s = k.shape[1], k.shape[2]
+    g = h // kvh
+    bs = min(block_s, s)
+    pad = (-s) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    ns = k.shape[2] // bs
+    vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    qg = q.reshape(b, kvh, g, d)
+    kern = functools.partial(_decode_kernel, bs=bs, ns=ns,
+                             scale=1.0 / math.sqrt(d))
+    out = pl.pallas_call(
+        kern,
+        grid=(b, kvh, ns),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda bi, hi, si: (bi, hi, si, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda bi, hi, si: (bi, hi, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(vl, qg, k, v)
+    return out.reshape(b, h, d)

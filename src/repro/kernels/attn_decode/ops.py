@@ -1,0 +1,17 @@
+"""Backend-dispatching entry point for decode attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.attn_decode import ref as _ref
+
+
+def decode_attention(q, k, v, *, valid_len) -> jax.Array:
+    backend = dispatch.get_backend()
+    with jax.named_scope("attn_core"):
+        if backend == "ref":
+            return _ref.decode_attention_ref(q, k, v, valid_len=valid_len)
+        from repro.kernels.attn_decode.kernel import decode_attention_pallas
+        return decode_attention_pallas(q, k, v, valid_len=valid_len,
+                                       interpret=(backend == "interpret"))

@@ -1,0 +1,2 @@
+"""Oracle for the decode-attention kernel (single query vs long KV cache)."""
+from repro.kernels.flash.ref import decode_attention_ref  # noqa: F401

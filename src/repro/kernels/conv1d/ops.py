@@ -1,0 +1,26 @@
+"""Backend-dispatching entry points for causal depthwise conv1d."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.conv1d import ref as _ref
+
+
+def causal_conv1d(x, w, b, *, initial_state: Optional[jax.Array] = None,
+                  activation: str = "silu") -> Tuple[jax.Array, jax.Array]:
+    backend = dispatch.get_backend()
+    with jax.named_scope("conv1d"):
+        if backend == "ref":
+            return _ref.causal_conv1d_ref(x, w, b, initial_state, activation)
+        from repro.kernels.conv1d.kernel import causal_conv1d_pallas
+        return causal_conv1d_pallas(x, w, b, initial_state=initial_state,
+                                    activation=activation,
+                                    interpret=(backend == "interpret"))
+
+
+def conv1d_decode_step(state, x_t, w, b, activation: str = "silu"):
+    with jax.named_scope("conv1d"):
+        return _ref.conv1d_decode_ref(state, x_t, w, b, activation)

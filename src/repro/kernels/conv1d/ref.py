@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the causal depthwise conv1d (Mamba's second custom op)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_conv1d_ref(x: jax.Array, w: jax.Array, b: jax.Array,
+                      initial_state: Optional[jax.Array] = None,
+                      activation: str = "silu") -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, C]; w: [C, K]; b: [C].  Returns (y [B,S,C], state [B,K-1,C]).
+
+    state carries the last K-1 inputs for streaming decode.
+    """
+    bsz, s, c = x.shape
+    k = w.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, k - 1, c), x.dtype)
+    xp = jnp.concatenate([initial_state.astype(x.dtype), x], axis=1)
+    # depthwise conv as a sum of K shifted scalings (K is tiny, typically 4)
+    y = jnp.zeros((bsz, s, c), jnp.float32)
+    for i in range(k):
+        y = y + xp[:, i:i + s, :].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    if activation == "silu":
+        y = jax.nn.silu(y)
+    new_state = xp[:, s:, :] if k > 1 else jnp.zeros((bsz, 0, c), x.dtype)
+    return y.astype(x.dtype), new_state.astype(x.dtype)
+
+
+def conv1d_decode_ref(state: jax.Array, x_t: jax.Array, w: jax.Array,
+                      b: jax.Array, activation: str = "silu"
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """state: [B, K-1, C]; x_t: [B, C]. Returns (y_t [B,C], new_state)."""
+    k = w.shape[-1]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # [B, K, C]
+    y = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    if activation == "silu":
+        y = jax.nn.silu(y)
+    return y.astype(x_t.dtype), window[:, 1:, :]

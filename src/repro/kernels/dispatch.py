@@ -1,0 +1,51 @@
+"""Kernel backend selection.
+
+Backends:
+  * "ref"       — pure-jnp oracle (used for the CPU multi-pod dry-run; GSPMD
+                  partitions it; named_scope tags keep the operator taxonomy).
+  * "pallas"    — Pallas TPU kernels (Mosaic). The deployment path on TPU.
+  * "interpret" — Pallas kernels executed with interpret=True (CPU validation).
+
+Default: "ref" on CPU, "pallas" on TPU.  Override with set_backend() or the
+REPRO_KERNEL_BACKEND environment variable.
+"""
+from __future__ import annotations
+
+import os
+import threading
+
+import jax
+
+_LOCAL = threading.local()
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        return env
+    try:
+        plat = jax.devices()[0].platform
+    except Exception:  # pragma: no cover
+        plat = "cpu"
+    return "pallas" if plat == "tpu" else "ref"
+
+
+def get_backend() -> str:
+    return getattr(_LOCAL, "backend", None) or default_backend()
+
+
+def set_backend(name: str) -> None:
+    assert name in ("ref", "pallas", "interpret"), name
+    _LOCAL.backend = name
+
+
+class use_backend:
+    def __init__(self, name: str):
+        self.name = name
+
+    def __enter__(self):
+        self.prev = getattr(_LOCAL, "backend", None)
+        set_backend(self.name)
+
+    def __exit__(self, *exc):
+        _LOCAL.backend = self.prev

@@ -1,0 +1,120 @@
+"""Pallas TPU flash-attention (prefill) kernel.
+
+Online-softmax over KV blocks with (m, l, acc) carried in VMEM scratch
+across the sequential innermost grid dimension.  Causal and sliding-window
+masks are evaluated per block; fully-masked blocks are skipped with
+``pl.when`` (predicated off on TPU — no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                  bq: int, bk: int, nk: int, causal: bool,
+                  window: Optional[int], scale: float, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # block-level skip: k block entirely in the future (causal) or entirely
+    # out of the attention window
+    run = True
+    if causal:
+        run = k_start <= q_start + bq - 1
+    if window is not None:
+        run = jnp.logical_and(run, (q_start - (k_start + bk - 1)) < window)
+
+    @pl.when(run)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[...]                              # [bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_s[...] = m_new
+        acc_s[...] = (acc_s[...] * corr
+                      + jax.lax.dot(p.astype(v.dtype), v,
+                                    preferred_element_type=jnp.float32))
+
+    @pl.when(ki == nk - 1)
+    def _():
+        o_ref[0, 0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-37)
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """q: [B, H, Sq, d]; k, v: [B, KVH, Skv, d] -> [B, H, Sq, d]."""
+    b, h, sq, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    pad_q = (-sq) % bq
+    pad_k = (-skv) % bk
+    kv_len = skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = q.shape[2] // bq
+    nk = k.shape[2] // bk
+    gsz = h // kvh
+    kern = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, nk=nk, causal=causal, window=window,
+        scale=1.0 / math.sqrt(d), kv_len=kv_len)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki: (bi, hi // gsz, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki: (bi, hi // gsz, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq] if pad_q else out

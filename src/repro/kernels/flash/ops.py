@@ -1,0 +1,20 @@
+"""Backend-dispatching entry point for (prefill) attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.flash import ref as _ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None) -> jax.Array:
+    backend = dispatch.get_backend()
+    with jax.named_scope("attn_core"):
+        if backend == "ref":
+            return _ref.attention_ref(q, k, v, causal=causal, window=window)
+        from repro.kernels.flash.kernel import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      interpret=(backend == "interpret"))

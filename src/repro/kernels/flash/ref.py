@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for flash attention: exact masked softmax attention.
+
+Layout: q [B, H, Sq, d]; k, v [B, KVH, Skv, d] (GQA: H % KVH == 0).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  q_offset: int = 0) -> jax.Array:
+    b, h, sq, d = q.shape
+    kvh = k.shape[1]
+    qg = q.reshape(b, kvh, h // kvh, sq, d)
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, *, valid_len) -> jax.Array:
+    """q: [B, H, d]; k,v: [B, KVH, S, d]; valid_len: scalar or [B]."""
+    b, h, d = q.shape
+    kvh = k.shape[1]
+    qg = q.reshape(b, kvh, h // kvh, d)
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(k.shape[2])
+    vl = jnp.asarray(valid_len)
+    vl = vl[:, None, None, None] if vl.ndim == 1 else vl
+    s = jnp.where(kpos[None, None, None, :] < vl, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)

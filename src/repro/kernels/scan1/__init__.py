@@ -1,0 +1,1 @@
+from repro.kernels.scan1.ops import selective_scan_op  # noqa: F401

@@ -1,0 +1,23 @@
+"""Backend-dispatching entry for the Mamba-1 selective scan."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.scan1 import ref as _ref
+
+
+def selective_scan_op(x, dt, A, Bm, Cm, D, *,
+                      initial_state: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    backend = dispatch.get_backend()
+    with jax.named_scope("ssm_core"):
+        if backend == "ref":
+            return _ref.selective_scan_ref(x, dt, A, Bm, Cm, D,
+                                           initial_state=initial_state)
+        from repro.kernels.scan1.kernel import selective_scan_pallas
+        return selective_scan_pallas(x, dt, A, Bm, Cm, D,
+                                     initial_state=initial_state,
+                                     interpret=(backend == "interpret"))

@@ -1,0 +1,39 @@
+"""Oracle for the Mamba-1 selective scan (S6) kernel.
+
+Shapes: x, dt: [B, S, C] (C = d_inner, dt post-softplus); A: [C, N];
+Bm, Cm: [B, S, N]; D: [C]; h: [B, C, N].
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, A, Bm, Cm, D,
+                       initial_state: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    b, s, c = x.shape
+    n = A.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    h0 = (jnp.zeros((b, c, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                     # [b,c],[b,c],[b,n],[b,n]
+        da = jnp.exp(dtt[..., None] * Af[None])   # [b,c,n]
+        h = h * da + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bcn,bn->bc", h, ct)
+        return h, y
+
+    hT, ys = jax.lax.scan(step, h0, (xf.transpose(1, 0, 2),
+                                     dtf.transpose(1, 0, 2),
+                                     Bf.transpose(1, 0, 2),
+                                     Cf.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) + xf * D.astype(jnp.float32)[None, None]
+    return y.astype(x.dtype), hT

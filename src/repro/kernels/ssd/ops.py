@@ -1,0 +1,46 @@
+"""Jit'd public entry points for the SSD operator (backend-dispatching)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.ssd import ref as _ref
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, *, chunk: int = 128,
+                initial_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    backend = dispatch.get_backend()
+    with jax.named_scope("ssd_core"):
+        if backend == "ref":
+            return _ref.ssd_chunked_ref(x, dt, A, Bm, Cm, D, chunk=chunk,
+                                        initial_state=initial_state)
+        from repro.kernels.ssd.kernel import ssd_pallas
+        return ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk,
+                          initial_state=initial_state,
+                          interpret=(backend == "interpret"))
+
+
+def ssd_chunked_raw(x, dt_raw, dt_bias, A_log, Bm, Cm, D, *,
+                    chunk: int = 128,
+                    initial_state: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Fused-ingest variant: raw dt + A_log preprocessing inside the kernel
+    scope (matches the CUDA kernel's fusion boundary)."""
+    with jax.named_scope("ssd_core"):
+        dt, A = _ref.preprocess_dt_A(dt_raw, dt_bias, A_log)
+    return ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk,
+                       initial_state=initial_state)
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t, D
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent decode step (memory-bound; stays in jnp — a single
+    [B,H,P,N] elementwise update + tiny contraction has no kernel upside)."""
+    with jax.named_scope("ssd_core"):
+        return _ref.ssd_decode_ref(state, x_t, dt_t, A, B_t, C_t, D)

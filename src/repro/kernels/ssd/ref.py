@@ -1,0 +1,144 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space dual) operator.
+
+Shapes (following the Mamba-2 paper):
+  x  : [B, S, H, P]   per-head inputs (P = headdim)
+  dt : [B, S, H]      post-softplus step sizes
+  A  : [H]            negative per-head decay rates
+  Bm : [B, S, G, N]   input projections (G groups, N = d_state)
+  Cm : [B, S, G, N]   output projections
+  D  : [H]            skip connection
+Returns y : [B, S, H, P] and final state [B, H, P, N].
+
+Two implementations:
+  * ``ssd_sequential`` — O(S) token-by-token recurrence (slow, ground truth).
+  * ``ssd_chunked_ref`` — the chunked dual form (matmul-heavy, what the
+    Pallas kernel implements): intra-chunk attention-like term + inter-chunk
+    state recurrence.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(t: jax.Array, n_heads: int) -> jax.Array:
+    """[B, S, G, N] -> [B, S, H, N] by repeating each group."""
+    g = t.shape[2]
+    return jnp.repeat(t, n_heads // g, axis=2)
+
+
+def ssd_sequential(x, dt, A, Bm, Cm, D,
+                   initial_state: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    Bh = _expand_groups(Bm, h).astype(jnp.float32)
+    Ch = _expand_groups(Cm, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp           # [b,h,p], [b,h], [b,h,n], [b,h,n]
+        da = jnp.exp(dtt * Af)          # [b,h]
+        upd = (dtt[..., None] * bt)[:, :, None, :] * xt[..., None]
+        hstate = hstate * da[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bhn->bhp", hstate, ct)
+        return hstate, yt
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3) + xf * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), hT
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """log-space segment sums: out[..., i, j] = sum_{j<k<=i} a[..., k], -inf j>i."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]   # sum (j, i]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def preprocess_dt_A(dt_raw, dt_bias, A_log):
+    """The fused kernels ingest RAW dt and A_log (like the CUDA
+    `mamba_split_conv1d_scan_combined`): softplus + sign happen in-register,
+    never round-tripping [B,S,H] through HBM."""
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + dt_bias.astype(jnp.float32))
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    return dt, A
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, D, chunk: int = 128,
+                    initial_state: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD (matmul dual form), numerically matching ssd_sequential."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0, f"seq {s} must be a multiple of chunk {chunk}"
+    nc, q = s // chunk, chunk
+    Bh = _expand_groups(Bm, h).astype(jnp.float32).reshape(b, nc, q, h, n)
+    Ch = _expand_groups(Cm, h).astype(jnp.float32).reshape(b, nc, q, h, n)
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    Af = A.astype(jnp.float32)
+
+    da = dtf * Af[None, None, None, :]           # [b,nc,q,h] log decay steps
+    da_t = da.transpose(0, 1, 3, 2)              # [b,nc,h,q]
+    cum = jnp.cumsum(da_t, axis=-1)              # inclusive cumsum
+    # intra-chunk: Y_diag[i] = sum_{j<=i} C_i.B_j exp(cum_i - cum_j) dt_j x_j
+    L = jnp.exp(_segsum(da_t))                   # [b,nc,h,q,q]
+    cb = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)
+    dtx = dtf[..., None] * xf                    # [b,nc,q,h,p]
+    y_diag = jnp.einsum("bchqk,bchqk,bckhp->bcqhp", cb, L, dtx)
+
+    # per-chunk final states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)  # [b,nc,h,q]
+    states = jnp.einsum("bchq,bcqhn,bcqhp->bchpn",
+                        decay_to_end, Bh, dtx)
+
+    # inter-chunk recurrence over chunk summaries
+    chunk_decay = jnp.exp(cum[..., -1])          # [b,nc,h]
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def carry_fn(hprev, inp):
+        st, dec = inp                            # [b,h,p,n], [b,h]
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev                       # emit state *entering* chunk
+
+    (hT, h_in) = jax.lax.scan(
+        carry_fn, h0, (states.transpose(1, 0, 2, 3, 4),
+                       chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)         # [b,nc,h,p,n]
+
+    # off-diagonal: Y_off[i] = C_i . h_in * exp(cum_i)
+    decay_from_start = jnp.exp(cum)              # [b,nc,h,q]
+    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp", Ch, h_in, decay_from_start)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), hT
+
+
+def ssd_decode_ref(state, x_t, dt_t, A, B_t, C_t, D
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. state: [B,H,P,N]; x_t: [B,H,P]; dt_t: [B,H];
+    B_t/C_t: [B,G,N]."""
+    h = x_t.shape[1]
+    Bh = jnp.repeat(B_t, h // B_t.shape[1], axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C_t, h // C_t.shape[1], axis=1).astype(jnp.float32)
+    xf, dtf = x_t.astype(jnp.float32), dt_t.astype(jnp.float32)
+    da = jnp.exp(dtf * A.astype(jnp.float32))
+    upd = (dtf[..., None] * Bh)[:, :, None, :] * xf[..., None]
+    new_state = state * da[..., None, None] + upd
+    y = (jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+         + xf * D.astype(jnp.float32)[None, :, None])
+    return y.astype(x_t.dtype), new_state

@@ -1,0 +1,195 @@
+"""Step builders shared by dryrun / train / serve launchers.
+
+Given (ModelConfig, WorkloadConfig, Mesh) a cell is built: the jittable
+step function, ShapeDtypeStruct argument trees, and the in/out shardings
+derived from the per-cell ShardingPlan.  Nothing here allocates device
+memory — the dry-run lowers/compiles against specs only.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.config import ModelConfig, WorkloadConfig
+from repro.core.workload import input_specs
+from repro.distributed.sharding import ShardingPlan, plan_sharding, zero1_rules
+from repro.models.lm import (init_lm_cache, lm_param_axes, model_param_defs,
+                             init_lm_params)
+from repro.models.params import tree_defs_map, is_def
+from repro.serving.engine import make_decode_step, make_encode_step, \
+    make_prefill_step
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class Cell:
+    cfg: ModelConfig
+    wl: WorkloadConfig
+    plan: ShardingPlan
+    step: Callable
+    args: Tuple[Any, ...]            # ShapeDtypeStruct trees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate: Tuple[int, ...] = ()     # donated arg indices (params/opt/cache)
+
+
+def _sds_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def param_sds(cfg: ModelConfig, dtype=None) -> Any:
+    defs = model_param_defs(cfg)
+    dt = jnp.dtype(dtype or cfg.param_dtype)
+    return tree_defs_map(lambda d: jax.ShapeDtypeStruct(d.shape, dt), defs)
+
+
+def param_shardings(cfg: ModelConfig, plan: ShardingPlan,
+                    rules_plan: Optional[ShardingPlan] = None) -> Any:
+    axes = lm_param_axes(cfg)
+    sds = param_sds(cfg)
+    rp = rules_plan or plan
+    return jax.tree_util.tree_map(
+        lambda ax, s: rp.named(ax, s.shape),
+        axes, sds,
+        is_leaf=lambda x: (isinstance(x, tuple)
+                           and all(a is None or isinstance(a, str)
+                                   for a in x)))
+
+
+_CACHE_AXES = {
+    "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "conv": ("layers", "batch", None, "conv_dim"),
+    "ssm": ("layers", "batch", "ssm_heads", None, None),
+}
+
+
+def cache_shardings(cache_sds, plan: ShardingPlan):
+    def leaf_sharding(path, leaf):
+        key = None
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str) and k in _CACHE_AXES:
+                key = k
+                break
+        if key is None:
+            return NamedSharding(plan.mesh, P())
+        return plan.named(_CACHE_AXES[key], leaf.shape, activation=True)
+
+    flat = jax.tree_util.tree_leaves_with_path(cache_sds)
+    leaves = [leaf_sharding(p, l) for p, l in flat]
+    treedef = jax.tree_util.tree_structure(cache_sds)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def input_shardings(cfg: ModelConfig, specs: Dict[str, Any],
+                    plan: ShardingPlan) -> Dict[str, Any]:
+    out = {}
+    for name, sd in specs.items():
+        if name == "features":
+            out[name] = plan.named(("batch", "seq", None), sd.shape,
+                                   activation=True)
+        else:
+            out[name] = plan.named(("batch", "seq"), sd.shape,
+                                   activation=True)
+    return out
+
+
+def build_cell(cfg: ModelConfig, wl: WorkloadConfig, mesh, *,
+               opt: Optional[OptConfig] = None,
+               microbatches: int = 1,
+               sequence_parallel: bool = False) -> Cell:
+    if wl.kind != "train":
+        microbatches = 1
+    plan = plan_sharding(cfg, wl, mesh, microbatches=microbatches,
+                         sequence_parallel=sequence_parallel)
+    specs = input_specs(cfg, wl)
+    in_sh_specs = input_shardings(cfg, specs, plan)
+
+    if wl.kind == "train":
+        opt = opt or OptConfig()
+        psds = param_sds(cfg)                         # f32 master params
+        osds = jax.eval_shape(functools.partial(init_opt_state, cfg=opt),
+                              psds)
+        psh = param_shardings(cfg, plan)
+        zplan = zero1_rules(plan)
+        osh = {"m": param_shardings(cfg, plan, zplan),
+               "v": param_shardings(cfg, plan, zplan),
+               "step": NamedSharding(mesh, P())}
+        raw_step = make_train_step(cfg, opt, plan, microbatches=microbatches)
+
+        def step(params, opt_state, batch):
+            with plan.activations():
+                return raw_step(params, opt_state, batch)
+
+        metrics_sh = {"loss": NamedSharding(mesh, P()),
+                      "grad_norm": NamedSharding(mesh, P()),
+                      "lr": NamedSharding(mesh, P())}
+        return Cell(cfg, wl, plan, step,
+                    args=(psds, osds, specs),
+                    in_shardings=(psh, osh, in_sh_specs),
+                    out_shardings=(psh, osh, metrics_sh),
+                    donate=(0, 1))
+
+    # inference cells: bf16 weights
+    psds = param_sds(cfg, dtype=cfg.compute_dtype)
+    psh = param_shardings(cfg, plan)
+    logits_sh = NamedSharding(
+        mesh, plan.spec(("batch", "seq", "vocab"), (1, 1, cfg.padded_vocab),
+                        activation=True))
+
+    if wl.kind == "prefill" and cfg.family in ("encoder", "audio"):
+        raw = make_encode_step(cfg, plan)
+
+        def step(params, inputs):
+            with plan.activations():
+                return raw(params, inputs)
+
+        return Cell(cfg, wl, plan, step, args=(psds, specs),
+                    in_shardings=(psh, in_sh_specs),
+                    out_shardings=logits_sh)
+
+    cache_fn = functools.partial(
+        init_lm_cache, cfg, wl.global_batch, wl.seq_len,
+        kv_repeat=plan.kv_repeat, shared_kv_repeat=plan.kv_repeat)
+    csds = jax.eval_shape(cache_fn)
+    csh = cache_shardings(csds, plan)
+
+    if wl.kind == "prefill":
+        raw = make_prefill_step(cfg, plan)
+
+        def step(params, inputs, cache):
+            with plan.activations():
+                return raw(params, inputs, cache)
+
+        return Cell(cfg, wl, plan, step, args=(psds, specs, csds),
+                    in_shardings=(psh, in_sh_specs, csh),
+                    out_shardings=(logits_sh, csh), donate=(2,))
+
+    # decode: serve_step — one token against a seq_len cache
+    raw = make_decode_step(cfg, plan)
+
+    def step(params, token, cache):
+        with plan.activations():
+            return raw(params, token, cache)
+
+    tok_sh = plan.named(("batch", None), specs["tokens"].shape,
+                        activation=True)
+    return Cell(cfg, wl, plan, step, args=(psds, specs["tokens"], csds),
+                in_shardings=(psh, tok_sh, csh),
+                out_shardings=(logits_sh, csh), donate=(2,))
+
+
+def lower_cell(cell: Cell):
+    with cell.plan.mesh:
+        jitted = jax.jit(cell.step, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate)
+        return jitted.lower(*cell.args)

@@ -1,0 +1,50 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \\
+      --steps 100 --seq 512 --batch 8 --ckpt-dir /tmp/ckpt
+
+On this CPU container it trains reduced configs end-to-end; on a real
+cluster the same entry point is pointed at the production mesh (the
+dry-run proves those configs compile)."""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import reduced
+from repro.core.registry import get, list_archs
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (default: reduced for CPU)")
+    args = ap.parse_args()
+
+    cfg = get(args.arch)
+    if not args.full_size:
+        cfg = reduced(cfg)
+    trainer = Trainer(
+        cfg, OptConfig(lr=args.lr),
+        TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, log_every=10,
+                      microbatches=args.microbatches),
+        seq_len=args.seq, global_batch=args.batch)
+    if trainer.maybe_restore():
+        print(f"[restore] resumed at step {trainer.state.step}")
+    state = trainer.run()
+    print(f"done: {state.step} steps, final loss "
+          f"{state.losses[-1]:.4f}, stragglers={state.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,307 @@
+"""GQA attention: dense / chunked(flash-style) / banded-local, plus decode w/ cache.
+
+All variants are written with *global* array semantics; GSPMD partitions them
+according to the activation sharding constraints installed by the step
+builder (see distributed/sharding.py).  The chunked path mirrors the Pallas
+flash kernel (kernels/flash) and is the lowering used for the CPU dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import AttnConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import dispatch as kdispatch
+from repro.models.params import ParamDef
+from repro.models.norms import head_rms_norm
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def _full_seq_attn(q, k, v, a: AttnConfig, *, causal: bool,
+                   window: Optional[int]) -> jax.Array:
+    """Dispatch the full-sequence core. q: [B,Sq,KV,G,hd]; k,v: [B,Skv,KV,hd]."""
+    if kdispatch.get_backend() != "ref":
+        from repro.kernels.flash.ops import flash_attention
+        b, sq, nkv, g, hd = q.shape
+        qh = q.reshape(b, sq, nkv * g, hd).transpose(0, 2, 1, 3)
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        o = flash_attention(qh, kh, vh, causal=causal, window=window)
+        return o.transpose(0, 2, 1, 3).reshape(b, sq, nkv, g, hd)
+    if window is not None and causal and k.shape[1] > 2 * window:
+        return _local_banded_attention(q, k, v, window=window)
+    if k.shape[1] <= a.dense_cutoff or a.impl == "dense":
+        return _dense_attention(q, k, v, causal=causal, window=window)
+    return _chunked_attention(q, k, v, causal=causal, window=window)
+
+
+def attn_param_defs(d_model: int, a: AttnConfig) -> Dict[str, ParamDef]:
+    defs = {
+        "wq": ParamDef((d_model, a.n_heads, a.head_dim), ("embed", "heads", None),
+                       fan_in=d_model),
+        "wk": ParamDef((d_model, a.n_kv_heads, a.head_dim), ("embed", "kv_heads", None),
+                       fan_in=d_model),
+        "wv": ParamDef((d_model, a.n_kv_heads, a.head_dim), ("embed", "kv_heads", None),
+                       fan_in=d_model),
+        "wo": ParamDef((a.n_heads, a.head_dim, d_model), ("heads", None, "embed"),
+                       init="normal_out", fan_in=a.n_heads * a.head_dim),
+    }
+    if a.qk_norm:
+        defs["q_norm"] = ParamDef((a.head_dim,), (None,), init="zeros")
+        defs["k_norm"] = ParamDef((a.head_dim,), (None,), init="zeros")
+    return defs
+
+
+def _repeat_kv(k: jax.Array, repeat: int) -> jax.Array:
+    if repeat == 1:
+        return k
+    return jnp.repeat(k, repeat, axis=2)
+
+
+def _group_q(q: jax.Array, n_kv: int) -> jax.Array:
+    """[B,S,H,hd] -> [B,S,KV,G,hd] grouping q heads by their kv head."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def _dense_attention(q, k, v, *, causal: bool, window: Optional[int],
+                     q_offset: int = 0) -> jax.Array:
+    """q: [B,Sq,KV,G,hd]; k,v: [B,Skv,KV,hd]. Returns [B,Sq,KV,G,hd]."""
+    with jax.named_scope("attn_core"):
+        scale = 1.0 / math.sqrt(q.shape[-1])
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                            preferred_element_type=jnp.float32) * scale
+        sq, skv = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(skv)[None, :]
+        mask = jnp.ones((sq, skv), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def _chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
+                       kv_block: int = 1024) -> jax.Array:
+    """Online-softmax over kv blocks (flash-style, numerically exact)."""
+    b, sq, nkv, g, hd = q.shape
+    skv = k.shape[1]
+    nb = -(-skv // kv_block)
+    pad = nb * kv_block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nb, kv_block, nkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, kv_block, nkv, hd).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / math.sqrt(hd)
+    qpos = jnp.arange(sq)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, bidx = blk
+        with jax.named_scope("attn_core"):
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = bidx * kv_block + jnp.arange(kv_block)
+            mask = kpos[None, :] < skv
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(q.dtype), vblk)
+            acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, nkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, sq, nkv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0),
+                                  (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-37).transpose(0, 3, 1, 2)[..., None]
+    return out.astype(q.dtype)
+
+
+def _local_banded_attention(q, k, v, *, window: int) -> jax.Array:
+    """Sliding-window causal attention via the two-block trick (exact for
+    window <= block).  FLOPs ~ S * 2w instead of S^2."""
+    b, sq, nkv, g, hd = q.shape
+    w = window
+    nb = -(-sq // w)
+    pad = nb * w - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(b, nb, w, nkv, g, hd)
+    kb = k.reshape(b, nb, w, nkv, hd)
+    vb = v.reshape(b, nb, w, nkv, hd)
+    kprev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    vprev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k2 = jnp.concatenate([kprev, kb], axis=2)  # [B, nb, 2w, KV, hd]
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    with jax.named_scope("attn_core"):
+        scale = 1.0 / math.sqrt(hd)
+        s = jnp.einsum("bnqkgd,bnskd->bnkgqs", qb, k2,
+                       preferred_element_type=jnp.float32) * scale
+        qpos = jnp.arange(w)[:, None] + w          # position within [prev, own]
+        kpos = jnp.arange(2 * w)[None, :]
+        mask = (qpos >= kpos) & ((qpos - kpos) < w)
+        # first block has no previous block
+        first = (kpos >= w) & mask
+        blk = jnp.arange(nb)
+        mask_b = jnp.where((blk == 0)[:, None, None], first[None], mask[None])
+        s = jnp.where(mask_b[None, :, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        ob = jnp.einsum("bnkgqs,bnskd->bnqkgd", p, v2)
+    out = ob.reshape(b, nb * w, nkv, g, hd)
+    return out[:, :sq]
+
+
+def _decode_attention(q, k, v, *, valid_len, window: Optional[int],
+                      pos: jax.Array) -> jax.Array:
+    """q: [B,1,KV,G,hd]; k,v: full cache [B,Skv,KV,hd]; mask by valid_len."""
+    with jax.named_scope("attn_core"):
+        scale = 1.0 / math.sqrt(q.shape[-1])
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = jnp.arange(k.shape[1])[None, :]
+        mask = kpos < valid_len
+        if window is not None:
+            # rolling cache: every slot is within the window by construction
+            mask = kpos < jnp.minimum(valid_len, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+
+
+def attention(p: Dict, x: jax.Array, a: AttnConfig, *,
+              rope: Optional[Tuple[jax.Array, jax.Array]],
+              window: Optional[int] = None,
+              cache: Optional[Dict] = None,
+              pos: Optional[jax.Array] = None,
+              kv_repeat: int = 1,
+              eps: float = 1e-6) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full attention sub-block: qkv proj -> rope -> core -> out proj.
+
+    cache=None: full-sequence (train/prefill, no cache returned).
+    cache dict with "k","v" [B,Skv,KV*rep,hd]: if x has S>1 it is a prefill
+    that fills the cache; if S==1 it is a decode step at position ``pos``.
+    """
+    b, s, _ = x.shape
+    with jax.named_scope("qkv_proj"):
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if a.qk_norm:
+        q = head_rms_norm(q, p["q_norm"], eps)
+        k = head_rms_norm(k, p["k_norm"], eps)
+    if rope is not None:
+        sin, cos = rope
+        if cache is not None and s == 1:
+            sin = jax.lax.dynamic_slice_in_dim(sin, pos, 1, axis=0)[None]
+            cos = jax.lax.dynamic_slice_in_dim(cos, pos, 1, axis=0)[None]
+            q = apply_rope(q, sin, cos)
+            k = apply_rope(k, sin, cos)
+        else:
+            q = apply_rope(q, sin[:s], cos[:s])
+            k = apply_rope(k, sin[:s], cos[:s])
+    # the cache stores UNREPEATED kv heads (exact GQA); replication to a
+    # shardable head count happens at compute time only.
+    kr = constrain(_repeat_kv(k, kv_repeat), ("batch", "seq", "kv_heads", None))
+    vr = constrain(_repeat_kv(v, kv_repeat), ("batch", "seq", "kv_heads", None))
+    n_kv = a.n_kv_heads * kv_repeat
+    q = constrain(_group_q(q, n_kv), ("batch", "seq", "kv_heads", None, None))
+
+    new_cache = None
+    if cache is None:
+        o = _full_seq_attn(q, kr, vr, a, causal=a.causal, window=window)
+    elif s > 1:
+        # prefill into cache
+        o = _full_seq_attn(q, kr, vr, a, causal=a.causal, window=window)
+        skv = cache["k"].shape[1]
+        if window is not None and skv == window:
+            # rolling cache: slot i must hold the token with pos % window == i
+            # (decode writes at pos % window), so roll the last-window slice.
+            if s >= window:
+                kw, vw = k[:, -window:], v[:, -window:]
+                shift = (s - window) % window
+                kw = jnp.roll(kw, shift, axis=1)
+                vw = jnp.roll(vw, shift, axis=1)
+            else:
+                kw = jnp.pad(k, ((0, 0), (0, window - s), (0, 0), (0, 0)))
+                vw = jnp.pad(v, ((0, 0), (0, window - s), (0, 0), (0, 0)))
+            new_cache = {"k": kw.astype(cache["k"].dtype),
+                         "v": vw.astype(cache["v"].dtype)}
+        else:
+            # match the cache layout before the write (kv_seq may be
+            # sequence-sharded when kv heads don't divide the model axis)
+            kw = constrain(k.astype(cache["k"].dtype),
+                           ("batch", "kv_seq", "kv_heads", None))
+            vw = constrain(v.astype(cache["v"].dtype),
+                           ("batch", "kv_seq", "kv_heads", None))
+            kfull = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], kw, 0, axis=1)
+            vfull = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vw, 0, axis=1)
+            new_cache = {"k": kfull, "v": vfull}
+    else:
+        # decode step
+        skv = cache["k"].shape[1]
+        slot = pos % skv if (window is not None and skv == window) else pos
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        kc = constrain(kc, ("batch", "kv_seq", "kv_heads", None))
+        vc = constrain(vc, ("batch", "kv_seq", "kv_heads", None))
+        new_cache = {"k": kc, "v": vc}
+        # keep the (possibly sequence-sharded) cache layout through the
+        # attention compute: with one query token, GSPMD then runs
+        # flash-decode split-S (partial softmax stats + tiny psum) instead
+        # of all-gathering the cache to match head sharding.
+        kcr = constrain(_repeat_kv(kc.astype(x.dtype), kv_repeat),
+                        ("batch", "kv_seq", "kv_heads", None))
+        vcr = constrain(_repeat_kv(vc.astype(x.dtype), kv_repeat),
+                        ("batch", "kv_seq", "kv_heads", None))
+        if kdispatch.get_backend() != "ref":
+            from repro.kernels.attn_decode.ops import decode_attention
+            bq, _, nkv_, g_, hd_ = q.shape
+            qh = q.reshape(bq, nkv_ * g_, hd_)
+            valid = jnp.minimum(pos + 1, kc.shape[1])
+            o = decode_attention(qh, kcr.transpose(0, 2, 1, 3),
+                                 vcr.transpose(0, 2, 1, 3),
+                                 valid_len=valid)
+            o = o.reshape(bq, 1, nkv_, g_, hd_)
+        else:
+            o = _decode_attention(q, kcr, vcr,
+                                  valid_len=pos + 1, window=window, pos=pos)
+
+    o = o.reshape(b, s, a.n_heads, a.head_dim)
+    with jax.named_scope("o_proj"):
+        y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return constrain(y, ("batch", "seq", "embed")), new_cache
+
+
+def init_attn_cache(a: AttnConfig, batch: int, max_seq: int, *,
+                    kv_repeat: int = 1, window: Optional[int] = None,
+                    dtype=jnp.bfloat16) -> Dict:
+    # kv_repeat intentionally ignored: the cache always stores the exact
+    # (unreplicated) kv heads; replication happens at compute time.
+    del kv_repeat
+    skv = min(max_seq, window) if window is not None else max_seq
+    shape = (batch, skv, a.n_kv_heads, a.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -1,0 +1,231 @@
+"""Unified language model: embedding -> scanned layer segments -> head.
+
+One code path serves every assigned architecture: dense / local:global /
+MoE / SSM / hybrid / encoder-only / modality-stub models, selected purely by
+``ModelConfig``.  Layers are grouped into repeating units and executed with
+``lax.scan`` over stacked params (compact HLO; trip counts recoverable by the
+HLO cost analyzer)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import blocks
+from repro.models.norms import rms_norm
+from repro.models.params import ParamDef, init_params, param_axes, stack_defs
+from repro.models.rope import rope_tables
+
+
+# --------------------------------------------------------------------------
+# parameter / cache construction
+# --------------------------------------------------------------------------
+
+def model_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    D, V = cfg.d_model, cfg.padded_vocab
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), fan_in=1, scale=0.02),
+        "final_norm": ParamDef((D,), ("embed",), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((D, V), ("embed", "vocab"), fan_in=D)
+    segs = []
+    for unit, n_rep in cfg.segments():
+        unit_defs = tuple(blocks.layer_param_defs(cfg, kind) for kind in unit)
+        segs.append(stack_defs(unit_defs, n_rep))
+    defs["segments"] = segs
+    if any(k == "mamba2+shared" for k in cfg.layer_kinds):
+        defs["shared"] = blocks.shared_block_defs(cfg)
+    if cfg.frontend != "none":
+        defs["frontend_proj"] = ParamDef((cfg.frontend_feature_dim, D),
+                                         (None, "embed"),
+                                         fan_in=cfg.frontend_feature_dim)
+    return defs
+
+
+def init_lm_params(cfg: ModelConfig, key: jax.Array, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    return init_params(model_param_defs(cfg), key, dtype)
+
+
+def lm_param_axes(cfg: ModelConfig):
+    return param_axes(model_param_defs(cfg))
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+                  kv_repeat: int = 1, shared_kv_repeat: int = 1,
+                  dtype=jnp.bfloat16):
+    segs = []
+    for unit, n_rep in cfg.segments():
+        unit_cache = tuple(
+            blocks.init_layer_cache(cfg, kind, batch, max_seq,
+                                    kv_repeat=kv_repeat,
+                                    shared_kv_repeat=shared_kv_repeat,
+                                    dtype=dtype)
+            for kind in unit)
+        segs.append(jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_rep,) + x.shape), unit_cache))
+    return {"segments": segs, "pos": jnp.zeros((), jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params, inputs: Dict[str, jax.Array]) -> jax.Array:
+    with jax.named_scope("embed"):
+        if cfg.frontend == "audio":
+            # input is precomputed frame features [B, S, feat]
+            x = jnp.einsum("bsf,fd->bsd",
+                           inputs["features"].astype(jnp.dtype(cfg.compute_dtype)),
+                           params["frontend_proj"].astype(
+                               jnp.dtype(cfg.compute_dtype)))
+        else:
+            emb = params["embed"]
+            x = jnp.take(emb, inputs["tokens"], axis=0)
+            x = x.astype(jnp.dtype(cfg.compute_dtype))
+            if cfg.frontend == "vision" and "features" in inputs:
+                feats = jnp.einsum(
+                    "bnf,fd->bnd",
+                    inputs["features"].astype(jnp.dtype(cfg.compute_dtype)),
+                    params["frontend_proj"].astype(jnp.dtype(cfg.compute_dtype)))
+                x = jnp.concatenate([feats, x], axis=1)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def _head(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    with jax.named_scope("lm_head"):
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x,
+                                params["embed"].astype(x.dtype))
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x,
+                                params["lm_head"].astype(x.dtype))
+        if cfg.padded_vocab != cfg.vocab_size:
+            mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+            logits = jnp.where(mask[None, None, :], logits, -1e30)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def _rope_for(cfg: ModelConfig, max_seq: int):
+    if cfg.attn is None and cfg.shared_attn is None:
+        return None, None
+    a = cfg.attn or cfg.shared_attn
+    rope = rope_tables(max_seq, a.head_dim, a.rope_theta)
+    rope_local = None
+    if cfg.attn is not None and cfg.attn.sliding_window is not None:
+        rope_local = rope_tables(max_seq, a.head_dim, 10_000.0)
+    return rope, rope_local
+
+
+def _run_segments(cfg: ModelConfig, params, x: jax.Array, *, cache=None,
+                  pos=None, kv_repeat=1, shared_kv_repeat=1, moe_groups=1,
+                  rope=None, rope_local=None, train: bool = False):
+    shared = params.get("shared")
+    new_cache_segs = []
+    for si, (unit, n_rep) in enumerate(cfg.segments()):
+        seg_params = params["segments"][si]
+        seg_cache = cache["segments"][si] if cache is not None else None
+
+        def unit_body(x, xs, unit=unit):
+            layer_p, layer_c = xs
+            new_cs = []
+            for li, kind in enumerate(unit):
+                c = layer_c[li] if layer_c is not None else None
+                x, nc = blocks.apply_layer(
+                    cfg, kind, layer_p[li], x, rope=rope,
+                    rope_local=rope_local, cache=c, pos=pos,
+                    kv_repeat=kv_repeat, shared=shared,
+                    shared_kv_repeat=shared_kv_repeat, moe_groups=moe_groups)
+                new_cs.append(nc if nc is not None else
+                              (dict() if c is None else c))
+            return x, tuple(new_cs)
+
+        body = unit_body
+        if train and cfg.remat == "block":
+            body = jax.checkpoint(unit_body)
+
+        def scan_body(x, xs):
+            return body(x, xs)
+
+        if cfg.scan_layers and n_rep > 1:
+            x, new_seg_cache = jax.lax.scan(
+                scan_body, x, (seg_params, seg_cache))
+        else:
+            ncs = []
+            for r in range(n_rep):
+                p_r = jax.tree_util.tree_map(lambda t: t[r], seg_params)
+                c_r = (jax.tree_util.tree_map(lambda t: t[r], seg_cache)
+                       if seg_cache is not None else None)
+                x, nc = body(x, (p_r, c_r))
+                ncs.append(nc)
+            new_seg_cache = (jax.tree_util.tree_map(
+                lambda *ts: jnp.stack(ts), *ncs) if cache is not None else None)
+        new_cache_segs.append(new_seg_cache)
+    return x, new_cache_segs
+
+
+def lm_forward(cfg: ModelConfig, params, inputs: Dict[str, jax.Array], *,
+               kv_repeat: int = 1, shared_kv_repeat: int = 1,
+               moe_groups: int = 1, train: bool = True) -> jax.Array:
+    """Full-sequence forward (training / encoder inference). Returns logits."""
+    x = _embed(cfg, params, inputs)
+    rope, rope_local = _rope_for(cfg, x.shape[1])
+    x, _ = _run_segments(cfg, params, x, kv_repeat=kv_repeat,
+                         shared_kv_repeat=shared_kv_repeat,
+                         moe_groups=moe_groups, rope=rope,
+                         rope_local=rope_local, train=train)
+    return _head(cfg, params, x)
+
+
+def lm_prefill(cfg: ModelConfig, params, inputs: Dict[str, jax.Array], cache,
+               *, kv_repeat: int = 1, shared_kv_repeat: int = 1,
+               moe_groups: int = 1) -> Tuple[jax.Array, Any]:
+    """Process the prompt, fill the cache. Returns (last-token logits, cache)."""
+    x = _embed(cfg, params, inputs)
+    seq = x.shape[1]
+    max_seq = _cache_max_seq(cfg, cache) or seq
+    rope, rope_local = _rope_for(cfg, max(seq, max_seq))
+    x, new_segs = _run_segments(cfg, params, x, cache=cache, pos=None,
+                                kv_repeat=kv_repeat,
+                                shared_kv_repeat=shared_kv_repeat,
+                                moe_groups=moe_groups, rope=rope,
+                                rope_local=rope_local, train=False)
+    logits = _head(cfg, params, x[:, -1:])
+    return logits, {"segments": new_segs,
+                    "pos": jnp.asarray(seq, jnp.int32)}
+
+
+def lm_decode_step(cfg: ModelConfig, params, token: jax.Array, cache, *,
+                   kv_repeat: int = 1, shared_kv_repeat: int = 1,
+                   moe_groups: int = 1) -> Tuple[jax.Array, Any]:
+    """One token step. token: [B, 1] int32 (or features [B,1,feat])."""
+    pos = cache["pos"]
+    inputs = {"tokens": token} if token.ndim == 2 else {"features": token}
+    x = _embed(cfg, params, inputs)
+    max_seq = _cache_max_seq(cfg, cache) or 1
+    rope, rope_local = _rope_for(cfg, max_seq)
+    x, new_segs = _run_segments(cfg, params, x, cache=cache, pos=pos,
+                                kv_repeat=kv_repeat,
+                                shared_kv_repeat=shared_kv_repeat,
+                                moe_groups=moe_groups, rope=rope,
+                                rope_local=rope_local, train=False)
+    logits = _head(cfg, params, x)
+    return logits, {"segments": new_segs, "pos": pos + 1}
+
+
+def _cache_max_seq(cfg: ModelConfig, cache) -> Optional[int]:
+    """KV caches are [n_rep, B, S, KV, hd]; mamba caches have no usable seq
+    dim, so look for a 5-D leaf (present whenever any layer has attention)."""
+    if cache is None:
+        return None
+    best = None
+    for seg in cache["segments"]:
+        for leaf in jax.tree_util.tree_leaves(seg):
+            if leaf.ndim == 5:
+                best = max(best or 0, int(leaf.shape[2]))
+    return best

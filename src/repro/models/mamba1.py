@@ -1,0 +1,163 @@
+"""Mamba-1 block: selective scan (S6) with data-dependent dt/B/C.
+
+Used by the paper-model suite (mamba-130m …) for the Fig. 7a reproduction.
+The scan core is a chunked associative scan (jnp; tagged "ssm_core")."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import SSMConfig
+from repro.distributed.sharding import constrain
+from repro.kernels.conv1d.ops import causal_conv1d, conv1d_decode_step
+from repro.models.params import ParamDef
+
+
+def dt_rank(d_model: int, s: SSMConfig) -> int:
+    return s.dt_rank or max(1, math.ceil(d_model / 16))
+
+
+def mamba1_param_defs(d_model: int, s: SSMConfig) -> Dict[str, ParamDef]:
+    di = s.d_inner(d_model)
+    dtr = dt_rank(d_model, s)
+    return {
+        "wx": ParamDef((d_model, di), ("embed", "conv_dim"), fan_in=d_model),
+        "wz": ParamDef((d_model, di), ("embed", "conv_dim"), fan_in=d_model),
+        "conv_w": ParamDef((di, s.conv_kernel), ("conv_dim", None),
+                           fan_in=s.conv_kernel),
+        "conv_b": ParamDef((di,), ("conv_dim",), init="zeros"),
+        "x_proj": ParamDef((di, dtr + 2 * s.d_state), ("conv_dim", None),
+                           fan_in=di),
+        "dt_proj": ParamDef((dtr, di), ("dt_rank", "conv_dim"), fan_in=dtr),
+        "dt_bias": ParamDef((di,), ("conv_dim",), init="dt_bias"),
+        "A_log": ParamDef((di, s.d_state), ("conv_dim", "dstate"), init="a_log"),
+        "D": ParamDef((di,), ("conv_dim",), init="ones"),
+        "out_proj": ParamDef((di, d_model), ("conv_dim", "embed"),
+                             init="normal_out", fan_in=di),
+    }
+
+
+def selective_scan(xs, dt, A, Bm, Cm, D, initial_state=None, chunk: int = 512):
+    """xs: [B,S,di]; dt: [B,S,di]; A: [di,N]; Bm/Cm: [B,S,N]; D: [di].
+    Returns (y [B,S,di], final h [B,di,N])."""
+    b, s, di = xs.shape
+    n = A.shape[-1]
+    with jax.named_scope("ssm_core"):
+        xf = xs.astype(jnp.float32)
+        dtf = dt.astype(jnp.float32)
+        dA = jnp.exp(dtf[..., None] * A[None, None])          # [B,S,di,N]
+        dBx = (dtf * xf)[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+        pad = (-s) % chunk
+        if pad:
+            dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                         constant_values=1.0)
+            dBx = jnp.pad(dBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        nc = (s + pad) // chunk
+        dA = dA.reshape(b, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+        dBx = dBx.reshape(b, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+        h0 = (jnp.zeros((b, di, n), jnp.float32) if initial_state is None
+              else initial_state.astype(jnp.float32))
+
+        def combine(l, r):
+            (a1, b1), (a2, b2) = l, r
+            return a1 * a2, a2 * b1 + b2
+
+        def chunk_step(h, inp):
+            cdA, cdBx = inp                                   # [B,chunk,di,N]
+            accA, accB = jax.lax.associative_scan(combine, (cdA, cdBx), axis=1)
+            hs = accB + accA * h[:, None]
+            return hs[:, -1], hs
+
+        hT, hs = jax.lax.scan(chunk_step, h0, (dA, dBx))
+        hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, di, n)[:, :s]
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cm.astype(jnp.float32))
+        y = y + xf * D[None, None]
+    return y.astype(xs.dtype), hT
+
+
+def mamba1_block(p: Dict, x: jax.Array, s: SSMConfig, d_model: int, *,
+                 cache: Optional[Dict] = None, eps: float = 1e-5
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    di = s.d_inner(d_model)
+    dtr = dt_rank(d_model, s)
+    dt_ = x.dtype
+    with jax.named_scope("ssm_in_proj"):
+        xi = jnp.einsum("bsd,de->bse", x, p["wx"].astype(dt_))
+        z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(dt_))
+    xi = constrain(xi, ("batch", "seq", "conv_dim"))
+    init_conv = cache["conv"] if cache is not None else None
+    xi, conv_state = causal_conv1d(xi, p["conv_w"], p["conv_b"],
+                                   initial_state=init_conv)
+    with jax.named_scope("ssm_in_proj"):
+        proj = jnp.einsum("bse,ef->bsf", xi, p["x_proj"].astype(dt_))
+        dt_low, bm, cm = (proj[..., :dtr], proj[..., dtr:dtr + s.d_state],
+                          proj[..., dtr + s.d_state:])
+        dt = jax.nn.softplus(
+            jnp.einsum("bsr,re->bse", dt_low, p["dt_proj"].astype(dt_)
+                       ).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    init_ssm = cache["ssm"] if cache is not None else None
+    from repro.kernels import dispatch as _dispatch
+    if _dispatch.get_backend() != "ref":
+        from repro.kernels.scan1.ops import selective_scan_op
+        y, ssm_state = selective_scan_op(xi, dt, A, bm, cm,
+                                         p["D"].astype(jnp.float32),
+                                         initial_state=init_ssm)
+    else:
+        y, ssm_state = selective_scan(xi, dt, A, bm, cm,
+                                      p["D"].astype(jnp.float32), init_ssm)
+    with jax.named_scope("ssm_gate"):
+        y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    with jax.named_scope("ssm_out_proj"):
+        out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype),
+                     "ssm": ssm_state.astype(jnp.float32)}
+    return constrain(out, ("batch", "seq", "embed")), new_cache
+
+
+def mamba1_decode(p: Dict, x: jax.Array, s: SSMConfig, d_model: int, *,
+                  cache: Dict, eps: float = 1e-5) -> Tuple[jax.Array, Dict]:
+    di = s.d_inner(d_model)
+    dtr = dt_rank(d_model, s)
+    dt_ = x.dtype
+    xt = x[:, 0]
+    with jax.named_scope("ssm_in_proj"):
+        xi = xt @ p["wx"].astype(dt_)
+        z = xt @ p["wz"].astype(dt_)
+    xi, conv_state = conv1d_decode_step(cache["conv"], xi,
+                                        p["conv_w"], p["conv_b"])
+    with jax.named_scope("ssm_in_proj"):
+        proj = xi @ p["x_proj"].astype(dt_)
+        dt_low, bm, cm = (proj[..., :dtr], proj[..., dtr:dtr + s.d_state],
+                          proj[..., dtr + s.d_state:])
+        dt = jax.nn.softplus((dt_low @ p["dt_proj"].astype(dt_)
+                              ).astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+    with jax.named_scope("ssm_core"):
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        h = cache["ssm"]
+        dA = jnp.exp(dt[..., None] * A[None])
+        dBx = (dt * xi.astype(jnp.float32))[..., None] \
+            * bm.astype(jnp.float32)[:, None, :]
+        h = h * dA + dBx
+        y = jnp.einsum("bdn,bn->bd", h, cm.astype(jnp.float32))
+        y = y + xi.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    with jax.named_scope("ssm_gate"):
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+    with jax.named_scope("ssm_out_proj"):
+        out = (y.astype(dt_) @ p["out_proj"].astype(dt_))[:, None, :]
+    return out, {"conv": conv_state, "ssm": h}
+
+
+def init_mamba1_cache(d_model: int, s: SSMConfig, batch: int,
+                      dtype=jnp.bfloat16) -> Dict:
+    di = s.d_inner(d_model)
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, s.d_state), jnp.float32),
+    }

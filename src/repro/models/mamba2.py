@@ -1,0 +1,133 @@
+"""Mamba-2 (SSD) block — in/out projections + conv1d + chunked SSD core."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import SSMConfig
+from repro.distributed.sharding import constrain
+from repro.kernels.conv1d.ops import causal_conv1d, conv1d_decode_step
+from repro.kernels.ssd.ops import (ssd_chunked, ssd_chunked_raw,
+                                   ssd_decode_step)
+from repro.models.norms import gated_rms_norm
+from repro.models.params import ParamDef
+
+
+def mamba2_param_defs(d_model: int, s: SSMConfig) -> Dict[str, ParamDef]:
+    di = s.d_inner(d_model)
+    nh = s.n_ssm_heads(d_model)
+    gn = s.n_groups * s.d_state
+    conv_dim = di + 2 * gn
+    return {
+        "wz": ParamDef((d_model, di), ("embed", "conv_dim"), fan_in=d_model),
+        "wxBC": ParamDef((d_model, conv_dim), ("embed", "conv_dim"), fan_in=d_model),
+        "wdt": ParamDef((d_model, nh), ("embed", "ssm_heads"), fan_in=d_model),
+        "conv_w": ParamDef((conv_dim, s.conv_kernel), ("conv_dim", None),
+                           fan_in=s.conv_kernel),
+        "conv_b": ParamDef((conv_dim,), ("conv_dim",), init="zeros"),
+        "A_log": ParamDef((nh,), ("ssm_heads",), init="a_log"),
+        "D": ParamDef((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDef((nh,), ("ssm_heads",), init="dt_bias"),
+        "norm_scale": ParamDef((di,), ("conv_dim",), init="zeros"),
+        "out_proj": ParamDef((di, d_model), ("conv_dim", "embed"),
+                             init="normal_out", fan_in=di),
+    }
+
+
+def _split_xbc(xbc: jax.Array, s: SSMConfig, d_model: int):
+    di = s.d_inner(d_model)
+    gn = s.n_groups * s.d_state
+    xs = xbc[..., :di]
+    bm = xbc[..., di:di + gn]
+    cm = xbc[..., di + gn:]
+    lead = xbc.shape[:-1]
+    return (xs, bm.reshape(*lead, s.n_groups, s.d_state),
+            cm.reshape(*lead, s.n_groups, s.d_state))
+
+
+def mamba2_block(p: Dict, x: jax.Array, s: SSMConfig, d_model: int, *,
+                 cache: Optional[Dict] = None, eps: float = 1e-5
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full-sequence pass. If cache is given (prefill), returns final states."""
+    b, seq, _ = x.shape
+    di = s.d_inner(d_model)
+    nh = s.n_ssm_heads(d_model)
+    dt_ = x.dtype
+    with jax.named_scope("ssm_in_proj"):
+        z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(dt_))
+        xbc = jnp.einsum("bsd,de->bse", x, p["wxBC"].astype(dt_))
+        dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(dt_))
+    xbc = constrain(xbc, ("batch", "seq", "conv_dim"))
+    init_conv = cache["conv"] if cache is not None else None
+    xbc, conv_state = causal_conv1d(xbc, p["conv_w"], p["conv_b"],
+                                    initial_state=init_conv)
+    xs, bm, cm = _split_xbc(xbc, s, d_model)
+    xh = constrain(xs.reshape(b, seq, nh, s.headdim),
+                   ("batch", "seq", "ssm_heads", None))
+
+    # pad sequence to a chunk multiple; padded dt_raw = -inf ⇒ softplus->0
+    # ⇒ padded tokens are inert
+    pad = (-seq) % s.chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_raw = jnp.pad(dt_raw, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=-30.0)
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    init_ssm = cache["ssm"] if cache is not None else None
+    y, ssm_state = ssd_chunked_raw(xh, dt_raw, p["dt_bias"], p["A_log"],
+                                   bm, cm, p["D"], chunk=s.chunk,
+                                   initial_state=init_ssm)
+    y = y[:, :seq].reshape(b, seq, di)
+    y = constrain(y, ("batch", "seq", "conv_dim"))
+    y = gated_rms_norm(y, z, p["norm_scale"], eps)
+    with jax.named_scope("ssm_out_proj"):
+        out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+    out = constrain(out, ("batch", "seq", "embed"))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype),
+                     "ssm": ssm_state.astype(cache["ssm"].dtype)}
+    return out, new_cache
+
+
+def mamba2_decode(p: Dict, x: jax.Array, s: SSMConfig, d_model: int, *,
+                  cache: Dict, eps: float = 1e-5) -> Tuple[jax.Array, Dict]:
+    """Single-token step. x: [B, 1, D]; cache: {"conv": [B,K-1,C], "ssm": [B,H,P,N]}."""
+    b = x.shape[0]
+    di = s.d_inner(d_model)
+    nh = s.n_ssm_heads(d_model)
+    dt_ = x.dtype
+    xt = x[:, 0]
+    with jax.named_scope("ssm_in_proj"):
+        z = xt @ p["wz"].astype(dt_)
+        xbc = xt @ p["wxBC"].astype(dt_)
+        dt_raw = xt @ p["wdt"].astype(dt_)
+    xbc, conv_state = conv1d_decode_step(cache["conv"], xbc,
+                                         p["conv_w"], p["conv_b"])
+    xs, bm, cm = _split_xbc(xbc, s, d_model)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, ssm_state = ssd_decode_step(cache["ssm"].astype(jnp.float32),
+                                   xs.reshape(b, nh, s.headdim), dt, A,
+                                   bm, cm, p["D"])
+    y = y.reshape(b, di)
+    y = gated_rms_norm(y[:, None, :], z[:, None, :], p["norm_scale"], eps)[:, 0]
+    with jax.named_scope("ssm_out_proj"):
+        out = (y @ p["out_proj"].astype(dt_))[:, None, :]
+    return out, {"conv": conv_state.astype(cache["conv"].dtype),
+                 "ssm": ssm_state.astype(cache["ssm"].dtype)}
+
+
+def init_mamba2_cache(d_model: int, s: SSMConfig, batch: int,
+                      dtype=jnp.bfloat16) -> Dict:
+    di = s.d_inner(d_model)
+    nh = s.n_ssm_heads(d_model)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, s.headdim, s.d_state), jnp.float32),
+    }

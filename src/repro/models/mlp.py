@@ -1,0 +1,29 @@
+"""Gated MLP (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamDef
+
+
+def mlp_param_defs(d_model: int, d_ff: int) -> Dict[str, ParamDef]:
+    return {
+        "wi": ParamDef((d_model, d_ff), ("embed", "ff"), fan_in=d_model),
+        "wg": ParamDef((d_model, d_ff), ("embed", "ff"), fan_in=d_model),
+        "wo": ParamDef((d_ff, d_model), ("ff", "embed"), init="normal_out",
+                       fan_in=d_ff),
+    }
+
+
+def mlp(p: Dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    with jax.named_scope("mlp"):
+        dt = x.dtype
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+        actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+        h = constrain(actf(g) * h, ("batch", "seq", "ff"))
+        return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))

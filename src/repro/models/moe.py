@@ -1,0 +1,162 @@
+"""Mixture-of-Experts feed-forward.
+
+Baseline impl is GShard-style einsum dispatch/combine with a capacity factor:
+it is fully GSPMD-partitionable (experts over the EP axis, expert d_ff over
+the TP axis; the token→expert exchange lowers to all-to-all style
+collectives).  A sort-based `ragged` path exists for single-shard execution
+and as the beyond-paper optimization target.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import MoEConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamDef
+
+
+def moe_param_defs(d_model: int, m: MoEConfig) -> Dict[str, ParamDef]:
+    e, f = m.n_experts, m.d_ff_expert
+    defs = {
+        "router": ParamDef((d_model, e), ("embed", None), fan_in=d_model),
+        "wi": ParamDef((e, d_model, f), ("experts", "embed", "expert_ff"),
+                       fan_in=d_model),
+        "wg": ParamDef((e, d_model, f), ("experts", "embed", "expert_ff"),
+                       fan_in=d_model),
+        "wo": ParamDef((e, f, d_model), ("experts", "expert_ff", "embed"),
+                       init="normal_out", fan_in=f),
+    }
+    if m.shared_expert:
+        defs["shared_wi"] = ParamDef((d_model, f), ("embed", "ff"), fan_in=d_model)
+        defs["shared_wg"] = ParamDef((d_model, f), ("embed", "ff"), fan_in=d_model)
+        defs["shared_wo"] = ParamDef((f, d_model), ("ff", "embed"),
+                                     init="normal_out", fan_in=f)
+    return defs
+
+
+def _capacity(tokens_per_group: int, m: MoEConfig) -> int:
+    c = math.ceil(tokens_per_group * m.experts_per_token / m.n_experts
+                  * m.capacity_factor)
+    if c >= 16:
+        return -(-c // 16) * 16   # pad to 16: capacity dim is TP-shardable
+    return max(8, -(-c // 8) * 8)
+
+
+def _router(p, x, m: MoEConfig):
+    with jax.named_scope("moe_route"):
+        logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32),
+                            p["router"].astype(jnp.float32))
+        gates, idx = jax.lax.top_k(logits, m.experts_per_token)
+        gates = jax.nn.softmax(gates, axis=-1)
+        return gates, idx
+
+
+def moe_gshard(p: Dict, x: jax.Array, m: MoEConfig, n_groups: int,
+               act: str = "silu") -> jax.Array:
+    """x: [B, S, D]. Tokens are reshaped into n_groups dispatch groups
+    aligned with the data shards."""
+    b, s, d = x.shape
+    t = b * s
+    g = min(n_groups, t)
+    while t % g:
+        g -= 1
+    tg = t // g
+    xg = x.reshape(g, tg, d)
+    xg = constrain(xg, ("groups", None, "embed"))
+    cap = _capacity(tg, m)
+
+    gates, idx = _router(p, xg, m)                      # [g,tg,k]
+    with jax.named_scope("moe_dispatch"):
+        e = m.n_experts
+        k = m.experts_per_token
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)   # [g,tg,k,e]
+        # position of each (token, expert-choice) in its expert's buffer
+        pos = jnp.cumsum(onehot.reshape(g, tg * k, e),
+                         axis=1).reshape(g, tg, k, e) - 1.0
+        # contract the expert dim per choice slot — never materialize the
+        # [g,t,k,e,cap] outer product (it is E×k×cap per token!)
+        pos_k = jnp.sum(pos * onehot, axis=-1)               # [g,tg,k]
+        keep_k = pos_k < cap                                 # capacity drop
+        capslot = jax.nn.one_hot(pos_k.astype(jnp.int32), cap,
+                                 dtype=jnp.float32)          # [g,tg,k,cap]
+        weighted = onehot * (gates * keep_k)[..., None]      # [g,tg,k,e]
+        combine = jnp.einsum("gtke,gtkc->gtec", weighted, capslot)
+        # token-major tensors: groups on data, experts on model
+        combine = constrain(combine, ("groups", None, "experts", None))
+        dispatch = (combine > 0).astype(x.dtype)
+        ex_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)
+        # compute in the natural token-major layout first (groups stay on
+        # data — no token gather), THEN reshard to expert-major: the
+        # (groups:data, experts:model) -> (experts:data) transition IS the
+        # EP all-to-all; capacity rows TP-shard on model.
+        ex_in = constrain(ex_in, ("groups", "experts", None, None))
+        ex_in = constrain(ex_in, (None, "experts_ep", "expert_cap", None))
+    with jax.named_scope("moe_expert"):
+        dt = x.dtype
+        h = jnp.einsum("gecd,edf->gecf", ex_in, p["wi"].astype(dt))
+        hg = jnp.einsum("gecd,edf->gecf", ex_in, p["wg"].astype(dt))
+        actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+        h = constrain(actf(hg) * h, (None, "experts_ep", None, "expert_ff"))
+        ex_out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))
+        ex_out = constrain(ex_out, (None, "experts_ep", "expert_cap", None))
+        # reverse all-to-all: back to token-major before the combine
+        ex_out = constrain(ex_out, ("groups", "experts", None, None))
+    with jax.named_scope("moe_combine"):
+        y = jnp.einsum("gtec,gecd->gtd", combine.astype(dt), ex_out)
+    y = y.reshape(b, s, d)
+    if m.shared_expert:
+        with jax.named_scope("moe_shared_expert"):
+            h = jnp.einsum("bsd,df->bsf", x, p["shared_wi"].astype(x.dtype))
+            hg = jnp.einsum("bsd,df->bsf", x, p["shared_wg"].astype(x.dtype))
+            actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+            y = y + jnp.einsum("bsf,fd->bsd", actf(hg) * h,
+                               p["shared_wo"].astype(x.dtype))
+    return constrain(y, ("batch", "seq", "embed"))
+
+
+def moe_ragged(p: Dict, x: jax.Array, m: MoEConfig, act: str = "silu") -> jax.Array:
+    """Sort-based MoE: flatten, sort by expert, grouped matmul, unsort.
+    No capacity drop. Single-shard semantics (use inside shard_map or on one
+    device); the beyond-paper optimized dispatch path."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    gates, idx = _router(p, xf[None], m)
+    gates, idx = gates[0], idx[0]                      # [t,k]
+    k, e = m.experts_per_token, m.n_experts
+    flat_idx = idx.reshape(-1)                         # [t*k]
+    order = jnp.argsort(flat_idx)
+    tok_of = order // k
+    xs = xf[tok_of]                                    # [t*k, d] sorted by expert
+    counts = jnp.bincount(flat_idx, length=e)
+    with jax.named_scope("moe_expert"):
+        dt = x.dtype
+        h = jax.lax.ragged_dot(xs, p["wi"].astype(dt), counts.astype(jnp.int32))
+        hg = jax.lax.ragged_dot(xs, p["wg"].astype(dt), counts.astype(jnp.int32))
+        actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+        o = jax.lax.ragged_dot(actf(hg) * h, p["wo"].astype(dt),
+                               counts.astype(jnp.int32))
+    with jax.named_scope("moe_combine"):
+        wsorted = gates.reshape(-1)[order]
+        y = jax.ops.segment_sum(o * wsorted[:, None].astype(o.dtype), tok_of,
+                                num_segments=t)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    if m.shared_expert:
+        with jax.named_scope("moe_shared_expert"):
+            h = jnp.einsum("bsd,df->bsf", x, p["shared_wi"].astype(x.dtype))
+            hg = jnp.einsum("bsd,df->bsf", x, p["shared_wg"].astype(x.dtype))
+            actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+            y = y + jnp.einsum("bsf,fd->bsd", actf(hg) * h,
+                               p["shared_wo"].astype(x.dtype))
+    return y
+
+
+def moe(p: Dict, x: jax.Array, m: MoEConfig, n_groups: int = 1,
+        act: str = "silu") -> jax.Array:
+    if m.impl == "ragged":
+        return moe_ragged(p, x, m, act)
+    return moe_gshard(p, x, m, n_groups, act)

@@ -1,0 +1,35 @@
+"""Normalization layers (pure functions)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    with jax.named_scope("norm"):
+        dt = x.dtype
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def gated_rms_norm(x: jax.Array, gate: jax.Array, scale: jax.Array,
+                   eps: float = 1e-5) -> jax.Array:
+    """Mamba2 gated RMSNorm: norm(x * silu(z)) with learned scale."""
+    with jax.named_scope("ssm_gate"):
+        dt = x.dtype
+        xf = x.astype(jnp.float32) * jax.nn.silu(gate.astype(jnp.float32))
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def head_rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMSNorm over head_dim (qwen3-style qk-norm). x: [..., H, hd]."""
+    with jax.named_scope("norm"):
+        dt = x.dtype
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)

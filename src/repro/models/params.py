@@ -1,0 +1,101 @@
+"""Parameter definition / initialization utilities.
+
+Params are plain nested dicts of jnp arrays.  Structure is described by a
+parallel pytree of :class:`ParamDef` (shape + logical axes + initializer),
+from which we derive both the initialized values and the sharding specs —
+one source of truth, no drift between init and partitioning.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamDef(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names (None = replicated dim)
+    init: str = "normal"              # normal | zeros | ones | a_log | dt_bias | normal_out
+    fan_in: Optional[int] = None      # override fan-in for "normal"
+    scale: float = 1.0
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_defs_map(fn, defs):
+    return jax.tree_util.tree_map(fn, defs, is_leaf=is_def)
+
+
+def stack_defs(defs, n: int, axis_name: str = "layers"):
+    """Add a leading stacked-layers dim to every ParamDef in the tree."""
+    def _stack(d: ParamDef) -> ParamDef:
+        return ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init, d.fan_in, d.scale)
+    return tree_defs_map(_stack, defs)
+
+
+def _init_leaf(key: jax.Array, d: ParamDef, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "a_log":
+        # Mamba: A in [1, 16], stored as log.  Uniform over the range.
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if d.init == "dt_bias":
+        # Inverse softplus of dt ~ LogUniform[1e-3, 1e-1].
+        u = jax.random.uniform(key, d.shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    if d.init in ("normal", "normal_out"):
+        fan_in = d.fan_in
+        if fan_in is None:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / math.sqrt(max(fan_in, 1))
+        if d.init == "normal_out":
+            std = std / 2.0
+        return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def init_params(defs, key: jax.Array, dtype=jnp.float32):
+    """Initialize a param pytree from its defs; keys derived from tree paths."""
+    leaves = jax.tree_util.tree_leaves_with_path(defs, is_leaf=is_def)
+
+    def path_str(path) -> str:
+        return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+    out = {}
+    for path, d in leaves:
+        k = jax.random.fold_in(key, np.uint32(hash(path_str(path)) & 0x7FFFFFFF))
+        out[path_str(path)] = _init_leaf(k, d, dtype)
+
+    # Rebuild nested structure.
+    flat_defs = {path_str(p): d for p, d in leaves}
+    assert set(flat_defs) == set(out)
+    treedef = jax.tree_util.tree_structure(defs, is_leaf=is_def)
+    ordered = [out[path_str(p)] for p, _ in leaves]
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+def param_axes(defs):
+    """Pytree of logical-axis tuples, same structure as the params."""
+    return tree_defs_map(lambda d: d.axes, defs)
+
+
+def param_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def cast_tree(params, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, params)

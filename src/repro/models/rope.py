@@ -1,0 +1,32 @@
+"""Rotary position embeddings."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_tables(seq_len: int, head_dim: int, theta: float = 10_000.0,
+                dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """(sin, cos) tables of shape [seq_len, head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    ang = jnp.outer(t, freqs)
+    return jnp.sin(ang).astype(dtype), jnp.cos(ang).astype(dtype)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: [B, S, H, hd]; sin/cos: [S, hd//2] (or [B, S, hd//2] for decode)."""
+    with jax.named_scope("rope"):
+        half = x.shape[-1] // 2
+        x1, x2 = x[..., :half], x[..., half:]
+        if sin.ndim == 2:      # [S, half] -> broadcast over batch & heads
+            s = sin[None, :, None, :]
+            c = cos[None, :, None, :]
+        else:                  # [B, S, half] (gathered at decode positions)
+            s = sin[:, :, None, :]
+            c = cos[:, :, None, :]
+        s, c = s.astype(x.dtype), c.astype(x.dtype)
+        return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)

@@ -1,0 +1,75 @@
+"""Cache administration utilities for the serving layer.
+
+The cache pytrees themselves are built by ``models.lm.init_lm_cache``;
+this module adds the operational pieces a serving deployment needs:
+sizing (admission control), slot extraction/insertion, and host
+offload/restore of individual slots (preemption & prefix reuse).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.core.memmodel import kv_cache_bytes, ssm_state_bytes
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_seq: int) -> int:
+    """Analytic cache footprint — the serving admission controller's input."""
+    return kv_cache_bytes(cfg, batch, max_seq) + ssm_state_bytes(cfg, batch)
+
+
+def max_slots(cfg: ModelConfig, max_seq: int, hbm_budget: float,
+              weight_bytes: float) -> int:
+    """How many concurrent sequences fit next to the weights."""
+    per_slot = cache_bytes(cfg, 1, max_seq)
+    free = hbm_budget - weight_bytes
+    return max(0, int(free // max(per_slot, 1)))
+
+
+def extract_slot(cache: Any, b: int) -> Any:
+    """Pull slot b out of a batched cache as a batch-1 cache (host copy)."""
+    def pick(leaf):
+        if leaf.ndim == 0:
+            return leaf
+        return jax.lax.dynamic_slice_in_dim(leaf, b, 1, axis=1)
+    segs = [jax.tree_util.tree_map(pick, seg) for seg in cache["segments"]]
+    return {"segments": segs, "pos": cache["pos"]}
+
+
+def insert_slot(cache: Any, one: Any, b: int) -> Any:
+    """Write a batch-1 cache into slot b (inverse of extract_slot)."""
+    def ins(full, single):
+        if full.ndim == 0:
+            return full
+        return jax.lax.dynamic_update_slice_in_dim(
+            full, single.astype(full.dtype), b, axis=1)
+    segs = [jax.tree_util.tree_map(ins, fs, ss)
+            for fs, ss in zip(cache["segments"], one["segments"])]
+    return {"segments": segs, "pos": cache["pos"]}
+
+
+def offload_slot(cache: Any, b: int) -> Dict[str, np.ndarray]:
+    """Host-offload one slot (preempted request) as numpy arrays."""
+    one = extract_slot(cache, b)
+    out = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(one):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def restore_slot(cache: Any, blob: Dict[str, np.ndarray], b: int) -> Any:
+    """Re-admit a previously offloaded slot."""
+    one = extract_slot(cache, b)   # template structure
+    leaves = jax.tree_util.tree_leaves_with_path(one)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path) for path, _ in leaves]
+    vals = [jnp.asarray(blob[k]) for k in keys]
+    treedef = jax.tree_util.tree_structure(one)
+    restored = jax.tree_util.tree_unflatten(treedef, vals)
+    return insert_slot(cache, restored, b)

@@ -1,0 +1,176 @@
+"""Serving runtime: prefill / decode step builders + a slot-based batch
+engine (continuous-batching-lite).
+
+``serve_step`` (the decode shape lowered by the dry-run) is one new token
+against a KV/state cache of the workload's seq_len, exactly per the
+assignment.  The engine keeps a fixed batch of slots; finished sequences
+are replaced by newly prefied prompts whose per-layer cache slices are
+scattered into the batch cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.distributed.sharding import ShardingPlan
+from repro.models.lm import (init_lm_cache, lm_decode_step, lm_forward,
+                             lm_prefill)
+
+
+def make_prefill_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
+    kv_repeat = plan.kv_repeat if plan else 1
+    moe_groups = plan.moe_groups if plan else 1
+
+    def prefill_step(params, inputs, cache):
+        return lm_prefill(cfg, params, inputs, cache, kv_repeat=kv_repeat,
+                          moe_groups=moe_groups)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
+    kv_repeat = plan.kv_repeat if plan else 1
+    moe_groups = plan.moe_groups if plan else 1
+
+    def decode_step(params, token, cache):
+        return lm_decode_step(cfg, params, token, cache, kv_repeat=kv_repeat,
+                              moe_groups=moe_groups)
+
+    return decode_step
+
+
+def make_encode_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
+    """Encoder-only archs (hubert): one full forward is the serve step."""
+    kv_repeat = plan.kv_repeat if plan else 1
+
+    def encode_step(params, inputs):
+        return lm_forward(cfg, params, inputs, kv_repeat=kv_repeat,
+                          train=False)
+
+    return encode_step
+
+
+def greedy_generate(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
+                    max_seq: int, gen_len: int,
+                    plan: Optional[ShardingPlan] = None
+                    ) -> Tuple[jax.Array, Any]:
+    """Prefill + greedy decode loop (used by examples/tests)."""
+    batch = next(iter(inputs.values())).shape[0]
+    kv_repeat = plan.kv_repeat if plan else 1
+    cache = init_lm_cache(cfg, batch, max_seq, kv_repeat=kv_repeat)
+    prefill = jax.jit(make_prefill_step(cfg, plan))
+    decode = jax.jit(make_decode_step(cfg, plan))
+    logits, cache = prefill(params, inputs, cache)
+    toks = [jnp.argmax(logits[..., :cfg.vocab_size], -1).astype(jnp.int32)]
+    for _ in range(gen_len - 1):
+        logits, cache = decode(params, toks[-1], cache)
+        toks.append(jnp.argmax(logits[..., :cfg.vocab_size], -1)
+                    .astype(jnp.int32))
+    return jnp.concatenate(toks, axis=1), cache
+
+
+# ---------------------------------------------------------------------------
+# slot-based batch engine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _scatter_slot(batch_cache, slot_cache, b: int):
+    """Insert a batch-1 cache into slot b of the batch cache (per leaf the
+    batch dim is axis 1: caches are stacked [n_rep, B, ...])."""
+    def ins(full, one):
+        if full.ndim == 0 or one is None:
+            return full
+        return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype),
+                                                   b, axis=1)
+    segs = [jax.tree_util.tree_map(ins, fs, ss)
+            for fs, ss in zip(batch_cache["segments"], slot_cache["segments"])]
+    return {"segments": segs, "pos": batch_cache["pos"]}
+
+
+class ServingEngine:
+    """Fixed-slot continuous batching. Decode advances all live slots each
+    step; finished slots are refilled from the queue via single-sequence
+    prefill + cache scatter."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int, max_seq: int,
+                 plan: Optional[ShardingPlan] = None):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        kv_repeat = plan.kv_repeat if plan else 1
+        self.cache = init_lm_cache(cfg, slots, max_seq, kv_repeat=kv_repeat)
+        self._prefill1 = jax.jit(make_prefill_step(cfg, plan))
+        self._decode = jax.jit(make_decode_step(cfg, plan))
+        self.kv_repeat = kv_repeat
+        self.live: List[Optional[Request]] = [None] * slots
+        self.tokens = np.zeros((slots, 1), np.int32)
+        self.pos = np.zeros((slots,), np.int64)
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for b in range(self.slots):
+            if self.live[b] is None and self.queue:
+                req = self.queue.pop(0)
+                one = init_lm_cache(self.cfg, 1, self.max_seq,
+                                    kv_repeat=self.kv_repeat)
+                logits, one = self._prefill1(
+                    self.params, {"tokens": jnp.asarray(req.prompt[None])},
+                    one)
+                self.cache = _scatter_slot(self.cache, one, b)
+                tok = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
+                req.out.append(tok)
+                self.tokens[b, 0] = tok
+                self.pos[b] = len(req.prompt)
+                self.live[b] = req
+
+    def step(self) -> int:
+        """One engine iteration. Returns number of live sequences."""
+        self._admit()
+        if not any(self.live):
+            return 0
+        # NOTE: single shared pos counter in the cache; slots admitted later
+        # waste a few cache rows — acceptable for the example engine.
+        self.cache = dict(self.cache, pos=jnp.asarray(
+            int(self.pos.max()), jnp.int32))
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(self.tokens), self.cache)
+        nxt = np.asarray(jnp.argmax(
+            logits[:, 0, :self.cfg.vocab_size], -1), np.int32)
+        n_live = 0
+        for b, req in enumerate(self.live):
+            if req is None:
+                continue
+            req.out.append(int(nxt[b]))
+            self.tokens[b, 0] = int(nxt[b])
+            self.pos[b] += 1
+            if len(req.out) >= req.max_new or self.pos[b] >= self.max_seq - 1:
+                req.done = True
+                self.finished.append(req)
+                self.live[b] = None
+            else:
+                n_live += 1
+        return n_live + len(self.queue)
+
+    def run(self) -> List[Request]:
+        while self.step() or self.queue:
+            pass
+        return self.finished

@@ -1,0 +1,78 @@
+"""AdamW in pure JAX (pytree states), with gradient clipping and optional
+gradient compression (bf16 accumulation/reduction — halves the wire bytes
+of the data-parallel gradient reduce-scatter)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    grad_dtype: str = "bfloat16"     # gradient compression for the DP reduce
+    state_dtype: str = "float32"     # m/v dtype (bf16 halves optimizer HBM)
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict[str, Any]:
+    sd = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, sd)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _schedule(cfg: OptConfig, step) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, state, cfg: OptConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    with jax.named_scope("optimizer"):
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        lr = _schedule(cfg, state["step"])
+        sd = jnp.dtype(cfg.state_dtype)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m1 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+            v1 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+            mh = m1 / (1 - cfg.b1 ** step)
+            vh = v1 / (1 - cfg.b2 ** step)
+            delta = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:   # no decay on norms/scalars/biases
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                    m1.astype(sd), v1.astype(sd))
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state["m"])
+        flat_v = jax.tree_util.tree_leaves(state["v"])
+        new = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [n[0] for n in new])
+        new_m = jax.tree_util.tree_unflatten(tdef, [n[1] for n in new])
+        new_v = jax.tree_util.tree_unflatten(tdef, [n[2] for n in new])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

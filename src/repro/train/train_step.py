@@ -1,0 +1,106 @@
+"""Loss + jittable train step with microbatch gradient accumulation.
+
+The step is built per (ModelConfig, ShardingPlan): GSPMD handles the DP
+gradient reduction (out_shardings of the grads = ZeRO-1 optimizer layout ⇒
+reduce-scatter), gradients are compressed to ``opt.grad_dtype`` before
+accumulation, and each scanned layer-unit is rematerialized in backward.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.distributed.sharding import ShardingPlan, constrain
+from repro.models.lm import lm_forward
+from repro.train.optimizer import OptConfig, adamw_update
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Sharded-vocab-friendly CE: logsumexp is a plain reduction and the
+    label pick is a masked sum — both partition over a model-sharded vocab
+    dim (take_along_axis would make GSPMD all-gather the logits)."""
+    with jax.named_scope("loss"):
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+        onehot = (vocab_iota[None, None, :] == labels[..., None])
+        ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        return jnp.mean(lse - ll)
+
+
+def make_loss_fn(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
+    kv_repeat = plan.kv_repeat if plan else 1
+    moe_groups = plan.moe_groups if plan else 1
+
+    def loss_fn(params, batch: Dict[str, jax.Array]) -> jax.Array:
+        # cast the f32 masters to the compute dtype ONCE per step: the
+        # layer scan then carries bf16 params and — crucially — the
+        # backward scan's stacked gradient carry is bf16 too (halves the
+        # dominant training buffer for the MoE giants).
+        from repro.models.params import cast_tree
+        params = cast_tree(params, jnp.dtype(cfg.compute_dtype))
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+        logits = lm_forward(cfg, params, inputs, kv_repeat=kv_repeat,
+                            moe_groups=moe_groups, train=True)
+        labels = batch["labels"]
+        if cfg.frontend == "vision" and "features" in inputs:
+            # labels cover the full (patches + text) sequence
+            pass
+        if labels.shape[1] != logits.shape[1]:
+            labels = labels[:, :logits.shape[1]]
+        # next-token prediction for causal families; per-frame CE for encoders
+        if cfg.family in ("encoder", "audio"):
+            return cross_entropy(logits, labels, cfg.vocab_size)
+        return cross_entropy(logits[:, :-1], labels[:, 1:], cfg.vocab_size)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig,
+                    plan: Optional[ShardingPlan] = None,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics)."""
+    loss_fn = make_loss_fn(cfg, plan)
+    gdtype = jnp.dtype(opt.grad_dtype)
+
+    def grads_of(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        with jax.named_scope("grad_compress"):
+            grads = jax.tree_util.tree_map(lambda g: g.astype(gdtype), grads)
+        return loss, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def acc_fn(carry, mbatch):
+                loss_acc, gacc = carry
+                loss, grads = grads_of(params, mbatch)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(a.dtype), gacc, grads)
+                return (loss_acc + loss, gacc), None
+
+            # accumulate in the compressed grad dtype (bf16 has the range;
+            # the f32 cast happens once inside the optimizer update)
+            gzero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, gdtype), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (0.0, gzero), mb)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        new_params, new_state, om = adamw_update(params, grads, opt_state, opt)
+        metrics = {"loss": loss, **om}
+        return new_params, new_state, metrics
+
+    return train_step

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see exactly 1 device (the dry-run sets its
+# own 512-device flag in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "float32")

@@ -1,0 +1,42 @@
+"""Unit tests for collective wire-cost models and the byte tokenizer."""
+import numpy as np
+
+from repro.data.tokenizer import BOS, PAD, batch_encode, decode, encode
+from repro.distributed.collectives import (WireCost, grad_reduce_dtype_saving,
+                                           overlap_headroom)
+
+
+def test_wire_costs_ring_factors():
+    wc = WireCost(n=16)
+    b = 1024.0
+    assert abs(wc.all_reduce(b) - 2 * b * 15 / 16) < 1e-9
+    assert abs(wc.all_gather(b) - b * 15 / 16) < 1e-9
+    assert abs(wc.reduce_scatter(b) - b * 15 / 16) < 1e-9
+    # AR == RS + AG (the sequence-parallel identity)
+    assert abs(wc.all_reduce(b)
+               - (wc.reduce_scatter(b) + wc.all_gather(b))) < 1e-9
+
+
+def test_overlap_headroom():
+    assert overlap_headroom(10.0, 5.0) == 1.0
+    assert overlap_headroom(5.0, 10.0) == 0.5
+    assert overlap_headroom(1.0, 0.0) == 1.0
+
+
+def test_grad_compression_halves_wire():
+    full, comp = grad_reduce_dtype_saving(1e9, 16)
+    assert abs(full / comp - 2.0) < 1e-9
+
+
+def test_tokenizer_roundtrip():
+    s = "hello, 世界!"
+    ids = encode(s, bos=True, eos=True)
+    assert ids[0] == BOS
+    assert decode(ids) == s
+
+
+def test_batch_encode_pads():
+    out = batch_encode(["ab", "cdef"], pad_to=8)
+    assert out.shape == (2, 8)
+    assert (out[0, -1] == PAD) and (out[1, 5] != PAD or out[1, 5] == PAD)
+    assert decode(out[0]) == "ab"

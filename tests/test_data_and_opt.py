@@ -1,0 +1,52 @@
+"""Data-pipeline determinism + optimizer behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def test_data_restart_determinism():
+    cfg = DataConfig(vocab_size=100, seq_len=64, global_batch=4, seed=3)
+    d1, d2 = SyntheticLM(cfg), SyntheticLM(cfg)
+    for step in (0, 5, 17):
+        b1, b2 = d1.batch(step), d2.batch(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d1.batch(0)["tokens"], d1.batch(1)["tokens"])
+
+
+def test_data_needle_planted():
+    cfg = DataConfig(vocab_size=100, seq_len=64, global_batch=2, seed=0)
+    b = SyntheticLM(cfg).batch(0)
+    toks = b["tokens"]
+    nl = cfg.needle_len
+    ins = int(cfg.seq_len * cfg.needle_offset_frac * 0.5)
+    rep = cfg.seq_len - 2 * nl - 1
+    np.testing.assert_array_equal(toks[:, ins:ins + nl], toks[:, rep:rep + nl])
+
+
+def test_adamw_converges_quadratic():
+    opt = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=1)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = init_opt_state(params, opt)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, opt)
+    assert float(loss(params)) < 1e-3
+
+
+def test_grad_clipping():
+    opt = OptConfig(lr=1e-2, grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    state = init_opt_state(params, opt)
+    huge = {"w": jnp.full(3, 1e6)}
+    _, _, metrics = adamw_update(params, huge, state, opt)
+    assert float(metrics["grad_norm"]) > 1e5      # reported pre-clip
+    # post-clip update must be bounded by ~lr
+    p2, _, _ = adamw_update(params, huge, state, opt)
+    assert float(jnp.abs(p2["w"]).max()) < 0.1

@@ -1,0 +1,38 @@
+"""Integration: the multi-pod dry-run machinery end-to-end in a subprocess
+(512 fake devices, production mesh, real arch config)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [("smollm-135m", "decode_32k")])
+def test_dryrun_cell_subprocess(tmp_path, arch, shape):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=420)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.load(open(tmp_path / f"{arch}__{shape}__single.json"))
+    assert rec["applicable"] and rec["chips"] == 256
+    assert rec["memory"]["fits"]
+    assert rec["hlo"]["flops"] > 0 and rec["hlo"]["bytes"] > 0
+    assert rec["hlo_fused"]["bytes"] <= rec["hlo"]["bytes"] * 1.01
+    assert rec["model_flops"] > 0
+
+
+def test_dryrun_skip_rules():
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.registry import get
+    from repro.core.config import SHAPES
+    from repro.core.workload import applicable
+    assert not applicable(get("hubert-xlarge"), SHAPES["decode_32k"])[0]
+    assert not applicable(get("llama3-8b"), SHAPES["long_500k"])[0]
+    assert applicable(get("gemma3-1b"), SHAPES["long_500k"])[0]
+    assert applicable(get("mamba2-2.7b"), SHAPES["long_500k"])[0]
+    assert applicable(get("zamba2-2.7b"), SHAPES["long_500k"])[0]

@@ -1,0 +1,121 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attn_decode.kernel import decode_attention_pallas
+from repro.kernels.attn_decode.ref import decode_attention_ref
+from repro.kernels.conv1d.kernel import causal_conv1d_pallas
+from repro.kernels.conv1d.ref import causal_conv1d_ref
+from repro.kernels.flash.kernel import flash_attention_pallas
+from repro.kernels.flash.ref import attention_ref
+from repro.kernels.ssd.kernel import ssd_pallas
+from repro.kernels.ssd.ref import ssd_chunked_ref, ssd_sequential
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+# --------------------------------------------------------------------- SSD
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (1, 32, 2, 8, 1, 8, 8),
+    (2, 64, 4, 16, 2, 16, 16),
+    (1, 128, 8, 64, 1, 32, 32),
+    (2, 96, 4, 32, 4, 64, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel(b, s, h, p, g, n, chunk, dtype):
+    ks = jax.random.split(KEY, 7)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, g, n), dtype)
+    Cm = jax.random.normal(ks[4], (b, s, g, n), dtype)
+    D = jax.random.normal(ks[5], (h,))
+    h0 = jax.random.normal(ks[6], (b, h, p, n), jnp.float32)
+    y_ref, h_ref = ssd_chunked_ref(x, dt, A, Bm, Cm, D, chunk=chunk,
+                                   initial_state=h0)
+    y_k, h_k = ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk,
+                          initial_state=h0, interpret=True)
+    scale = float(jnp.abs(y_ref.astype(jnp.float32)).max()) + 1e-6
+    assert float(jnp.abs(y_ref.astype(jnp.float32)
+                         - y_k.astype(jnp.float32)).max()) / scale < _tol(dtype)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_ssd_kernel_matches_sequential_oracle():
+    b, s, h, p, g, n = 1, 64, 2, 16, 1, 16
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, g, n))
+    Cm = jax.random.normal(ks[4], (b, s, g, n))
+    D = jax.random.normal(ks[5], (h,))
+    y_seq, h_seq = ssd_sequential(x, dt, A, Bm, Cm, D)
+    y_k, h_k = ssd_pallas(x, dt, A, Bm, Cm, D, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_seq),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_seq),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------------ conv1d
+@pytest.mark.parametrize("b,s,c,k", [(1, 64, 32, 4), (2, 128, 64, 4),
+                                     (1, 256, 128, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv1d_kernel(b, s, c, k, dtype):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, c), dtype)
+    w = jax.random.normal(ks[1], (c, k))
+    bias = jax.random.normal(ks[2], (c,))
+    st = jax.random.normal(ks[3], (b, k - 1, c), dtype)
+    y_ref, s_ref = causal_conv1d_ref(x, w, bias, st)
+    y_k, s_k = causal_conv1d_pallas(x, w, bias, initial_state=st,
+                                    block_seq=min(64, s), block_ch=min(32, c),
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=_tol(dtype), atol=_tol(dtype))
+    np.testing.assert_allclose(np.asarray(s_k, np.float32),
+                               np.asarray(s_ref, np.float32), rtol=1e-6)
+
+
+# ------------------------------------------------------------------- flash
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel(causal, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 8, 80, 32), dtype)
+    k = jax.random.normal(ks[1], (2, 2, 80, 32), dtype)
+    v = jax.random.normal(ks[2], (2, 2, 80, 32), dtype)
+    o_ref = attention_ref(q, k, v, causal=causal, window=window)
+    o_k = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=32, block_k=32, interpret=True)
+    scale = float(jnp.abs(o_ref.astype(jnp.float32)).max()) + 1e-6
+    err = float(jnp.abs(o_ref.astype(jnp.float32)
+                        - o_k.astype(jnp.float32)).max()) / scale
+    assert err < _tol(dtype), err
+
+
+# ------------------------------------------------------------ decode attn
+@pytest.mark.parametrize("b,h,kvh,s,d", [(2, 8, 4, 200, 32), (1, 4, 1, 64, 64),
+                                         (3, 12, 4, 300, 16)])
+def test_decode_kernel(b, h, kvh, s, d):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, kvh, s, d))
+    v = jax.random.normal(ks[2], (b, kvh, s, d))
+    vl = jnp.asarray(np.random.default_rng(0).integers(1, s, b), jnp.int32)
+    o_ref = decode_attention_ref(q, k, v, valid_len=vl)
+    o_k = decode_attention_pallas(q, k, v, valid_len=vl, block_s=64,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,114 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.config import AttnConfig, ModelConfig, SSMConfig
+from repro.kernels.conv1d.ref import causal_conv1d_ref
+from repro.kernels.flash.ref import attention_ref
+from repro.kernels.ssd.ref import ssd_chunked_ref, ssd_sequential
+from repro.models import init_lm_params, lm_forward
+
+SET = settings(max_examples=20, deadline=None)
+
+
+@SET
+@given(chunk=st.sampled_from([4, 8, 16, 32]),
+       seed=st.integers(0, 2 ** 16))
+def test_ssd_chunk_size_invariance(chunk, seed):
+    """SSD output must not depend on the chunking (the dual form is exact)."""
+    key = jax.random.PRNGKey(seed)
+    b, s, h, p, g, n = 1, 32, 2, 4, 1, 4
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, g, n))
+    Cm = jax.random.normal(ks[4], (b, s, g, n))
+    D = jax.random.normal(ks[5], (h,))
+    y_seq, h_seq = ssd_sequential(x, dt, A, Bm, Cm, D)
+    y_c, h_c = ssd_chunked_ref(x, dt, A, Bm, Cm, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_seq),
+                               rtol=2e-3, atol=2e-3)
+
+
+@SET
+@given(split=st.integers(1, 63), seed=st.integers(0, 2 ** 16))
+def test_conv1d_streaming_split_invariance(split, seed):
+    """Streaming property: conv(x) == conv(x[:k]) ++ conv(x[k:], state)."""
+    key = jax.random.PRNGKey(seed)
+    b, s, c, k = 1, 64, 8, 4
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (b, s, c))
+    w = jax.random.normal(ks[1], (c, k))
+    bias = jax.random.normal(ks[2], (c,))
+    y_full, st_full = causal_conv1d_ref(x, w, bias)
+    y1, st1 = causal_conv1d_ref(x[:, :split], w, bias)
+    y2, st2 = causal_conv1d_ref(x[:, split:], w, bias, initial_state=st1)
+    np.testing.assert_allclose(np.concatenate([y1, y2], 1),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               rtol=1e-6)
+
+
+@SET
+@given(pos=st.integers(0, 14), seed=st.integers(0, 2 ** 16))
+def test_attention_causality(pos, seed):
+    """Perturbing token t must not change outputs at positions < t."""
+    key = jax.random.PRNGKey(seed)
+    b, h, kvh, s, d = 1, 4, 2, 16, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, kvh, s, d))
+    v = jax.random.normal(ks[2], (b, kvh, s, d))
+    o1 = attention_ref(q, k, v, causal=True)
+    k2 = k.at[:, :, pos].add(1.0)
+    v2 = v.at[:, :, pos].add(-2.0)
+    o2 = attention_ref(q, k2, v2, causal=True)
+    if pos > 0:
+        np.testing.assert_allclose(np.asarray(o1[:, :, :pos]),
+                                   np.asarray(o2[:, :, :pos]),
+                                   rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(o1[:, :, pos:]),
+                           np.asarray(o2[:, :, pos:]))
+
+
+@SET
+@given(window=st.integers(1, 8), seed=st.integers(0, 2 ** 10))
+def test_sliding_window_locality(window, seed):
+    """With window w, output at t only depends on tokens in (t-w, t]."""
+    key = jax.random.PRNGKey(seed)
+    b, h, kvh, s, d = 1, 2, 1, 16, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, kvh, s, d))
+    v = jax.random.normal(ks[2], (b, kvh, s, d))
+    o1 = attention_ref(q, k, v, causal=True, window=window)
+    # perturb token 0: outputs at positions >= window must be unchanged
+    k2 = k.at[:, :, 0].add(3.0)
+    o2 = attention_ref(q, k2, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o1[:, :, window:]),
+                               np.asarray(o2[:, :, window:]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@SET
+@given(seed=st.integers(0, 2 ** 16))
+def test_lm_permutation_equivariance_over_batch(seed):
+    """Permuting the batch permutes the logits (no cross-batch leakage)."""
+    cfg = ModelConfig(name="t", family="ssm", n_layers=2, d_model=32, d_ff=0,
+                      vocab_size=64,
+                      ssm=SSMConfig(d_state=8, headdim=8, chunk=8),
+                      layer_pattern=("mamba2",), vocab_pad_multiple=16)
+    key = jax.random.PRNGKey(seed)
+    params = init_lm_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(key, (4, 16), 0, cfg.vocab_size, jnp.int32)
+    out = lm_forward(cfg, params, {"tokens": tokens}, train=False)
+    perm = jnp.array([2, 0, 3, 1])
+    out_p = lm_forward(cfg, params, {"tokens": tokens[perm]}, train=False)
+    np.testing.assert_allclose(np.asarray(out[perm], np.float32),
+                               np.asarray(out_p, np.float32),
+                               rtol=2e-2, atol=2e-2)

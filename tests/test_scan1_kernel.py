@@ -1,0 +1,54 @@
+"""Mamba-1 selective-scan Pallas kernel: shape/dtype sweep vs oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.scan1.kernel import selective_scan_pallas
+from repro.kernels.scan1.ref import selective_scan_ref
+from repro.models.mamba1 import selective_scan as assoc_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _data(b, s, c, n, dtype):
+    ks = jax.random.split(KEY, 7)
+    return (jax.random.normal(ks[0], (b, s, c), dtype),
+            jax.nn.softplus(jax.random.normal(ks[1], (b, s, c))).astype(
+                jnp.float32),
+            -jnp.exp(jax.random.normal(ks[2], (c, n))),
+            jax.random.normal(ks[3], (b, s, n), dtype),
+            jax.random.normal(ks[4], (b, s, n), dtype),
+            jax.random.normal(ks[5], (c,)),
+            jax.random.normal(ks[6], (b, c, n), jnp.float32))
+
+
+@pytest.mark.parametrize("b,s,c,n,bs,bc", [
+    (1, 32, 16, 8, 8, 16), (2, 64, 32, 16, 16, 16), (1, 48, 64, 16, 16, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_scan1_kernel_sweep(b, s, c, n, bs, bc, dtype):
+    x, dt, A, Bm, Cm, D, h0 = _data(b, s, c, n, dtype)
+    y1, h1 = selective_scan_ref(x, dt, A, Bm, Cm, D, initial_state=h0)
+    y2, h2 = selective_scan_pallas(x, dt, A, Bm, Cm, D, initial_state=h0,
+                                   block_seq=bs, block_ch=bc, interpret=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    scale = float(jnp.abs(y1.astype(jnp.float32)).max()) + 1e-6
+    assert float(jnp.abs(y1.astype(jnp.float32)
+                         - y2.astype(jnp.float32)).max()) / scale < tol
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h1),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_scan1_all_three_paths_agree():
+    x, dt, A, Bm, Cm, D, h0 = _data(2, 64, 32, 16, jnp.float32)
+    y1, h1 = selective_scan_ref(x, dt, A, Bm, Cm, D, initial_state=h0)
+    y2, h2 = selective_scan_pallas(x, dt, A, Bm, Cm, D, initial_state=h0,
+                                   block_seq=16, block_ch=16, interpret=True)
+    y3, h3 = assoc_scan(x, dt, A, Bm, Cm, D, initial_state=h0, chunk=16)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y3), np.asarray(y1),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h3),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,46 @@
+"""Serving cache administration: slot extract/insert/offload roundtrip +
+admission sizing."""
+import jax
+import numpy as np
+
+from repro.core.config import AttnConfig, ModelConfig, SSMConfig
+from repro.models.lm import init_lm_cache
+from repro.serving.cache import (cache_bytes, extract_slot, insert_slot,
+                                 max_slots, offload_slot, restore_slot)
+
+
+def _cfg():
+    return ModelConfig(
+        name="c", family="hybrid", n_layers=4, d_model=64, d_ff=0,
+        vocab_size=64, ssm=SSMConfig(d_state=16, headdim=16, chunk=16),
+        shared_attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=16),
+        shared_attn_d_ff=128, layer_pattern=("mamba2", "mamba2+shared"),
+        vocab_pad_multiple=16)
+
+
+def test_slot_roundtrip():
+    cfg = _cfg()
+    cache = init_lm_cache(cfg, 3, 32)
+    # fill with recognizable values
+    cache = jax.tree_util.tree_map(
+        lambda x: (jax.numpy.ones_like(x) * 7 if x.ndim else x), cache)
+    one = extract_slot(cache, 1)
+    for leaf in jax.tree_util.tree_leaves(one):
+        if leaf.ndim:
+            assert leaf.shape[1] == 1
+    blob = offload_slot(cache, 1)
+    fresh = init_lm_cache(cfg, 3, 32)
+    fresh = restore_slot(fresh, blob, 2)
+    got = extract_slot(fresh, 2)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(one)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_admission_sizing():
+    cfg = _cfg()
+    per = cache_bytes(cfg, 1, 2048)
+    assert per > 0
+    n = max_slots(cfg, 2048, hbm_budget=100 * per + 5e6, weight_bytes=5e6)
+    assert n == 100
+    assert max_slots(cfg, 2048, hbm_budget=1e3, weight_bytes=5e6) == 0

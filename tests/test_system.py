@@ -1,0 +1,109 @@
+"""End-to-end behaviour tests: training convergence, fault-tolerant
+restart, serving engine, memory model sanity vs paper claims."""
+import numpy as np
+import pytest
+
+from repro.core.config import (AttnConfig, ModelConfig, RTX_4090, SSMConfig)
+from repro.core.memmodel import inference_memory, max_seq_len
+from repro.core.registry import get
+from repro.serving.engine import Request, ServingEngine, greedy_generate
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _tiny_hybrid():
+    return ModelConfig(
+        name="sys-hybrid", family="hybrid", n_layers=4, d_model=64, d_ff=0,
+        vocab_size=64, ssm=SSMConfig(d_state=16, headdim=16, chunk=16),
+        shared_attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=16),
+        shared_attn_d_ff=128, layer_pattern=("mamba2", "mamba2+shared"),
+        vocab_pad_multiple=16)
+
+
+def test_training_reduces_loss():
+    t = Trainer(_tiny_hybrid(), OptConfig(lr=3e-3),
+                TrainerConfig(steps=30, ckpt_every=0, log_every=100),
+                seq_len=64, global_batch=8)
+    st = t.run(log=lambda *_: None)
+    first = np.mean(st.losses[:5])
+    last = np.mean(st.losses[-5:])
+    assert last < first - 0.05, (first, last)
+
+
+def test_restart_resumes_identically(tmp_path):
+    """Train 10 steps with a checkpoint at 5; a fresh trainer restored at 5
+    must reproduce steps 6-10 exactly (deterministic data + optimizer)."""
+    cfg = _tiny_hybrid()
+    kw = dict(seq_len=32, global_batch=4)
+    t1 = Trainer(cfg, OptConfig(lr=1e-3),
+                 TrainerConfig(steps=10, ckpt_every=5, log_every=100,
+                               ckpt_dir=str(tmp_path)), **kw)
+    s1 = t1.run(log=lambda *_: None)
+    t2 = Trainer(cfg, OptConfig(lr=1e-3),
+                 TrainerConfig(steps=10, ckpt_every=100, log_every=100,
+                               ckpt_dir=str(tmp_path)), **kw)
+    assert t2.maybe_restore() and t2.state.step in (5, 10)
+    if t2.state.step == 10:   # final checkpoint also saved; re-restore at 5
+        from repro.checkpoint.ckpt import restore
+        tree = {"params": t2.params, "opt": t2.opt_state}
+        r = restore(str(tmp_path), tree, step=5)
+        t2.params, t2.opt_state = r["params"], r["opt"]
+        t2.state.step = 5
+    s2 = t2.run(log=lambda *_: None)
+    np.testing.assert_allclose(s1.losses[5:], s2.losses, rtol=1e-5)
+
+
+def test_serving_engine_continuous_batching():
+    cfg = _tiny_hybrid()
+    t = Trainer(cfg, OptConfig(), TrainerConfig(steps=1, ckpt_every=0),
+                seq_len=16, global_batch=2)
+    eng = ServingEngine(cfg, t.params, slots=2, max_seq=32)
+    for i in range(5):
+        eng.submit(Request(rid=i, prompt=np.arange(6, dtype=np.int32) + 2,
+                           max_new=4))
+    done = eng.run()
+    assert sorted(r.rid for r in done) == list(range(5))
+    assert all(len(r.out) == 4 for r in done)
+
+
+def test_greedy_generate_shapes():
+    cfg = _tiny_hybrid()
+    t = Trainer(cfg, OptConfig(), TrainerConfig(steps=1, ckpt_every=0),
+                seq_len=16, global_batch=2)
+    import jax.numpy as jnp
+    toks, _ = greedy_generate(cfg, t.params,
+                              {"tokens": jnp.ones((2, 8), jnp.int32)},
+                              max_seq=24, gen_len=6)
+    assert toks.shape == (2, 6)
+    assert (np.asarray(toks) < cfg.vocab_size).all()
+
+
+# ---------------------------------------------------------------------------
+# paper-claim sanity on the analytic memory model (Fig. 5)
+# ---------------------------------------------------------------------------
+
+def test_oom_frontier_orders_like_paper():
+    cap = RTX_4090.hbm_bytes
+    qwen = max_seq_len(get("qwen2.5-0.5b"), cap)
+    mamba = max_seq_len(get("mamba2-780m"), cap)
+    falcon = max_seq_len(get("falcon-h1-0.5b"), cap)
+    phi = max_seq_len(get("phi-3-mini"), cap)
+    assert phi < qwen < falcon < mamba, (phi, qwen, falcon, mamba)
+    assert mamba > 4 * qwen * 0.5, "SSM frontier should be ~4x transformer's"
+
+
+def test_ssm_memory_flat_in_seq():
+    m = get("mamba2-780m")
+    a = inference_memory(m, 1, 8192).total
+    b = inference_memory(m, 1, 65536).total
+    # only activations grow (no KV cache): growth must be modest
+    assert b < 2.5 * a
+
+
+def test_kv_cache_matches_eq2():
+    cfg = get("llama3-8b")
+    from repro.core.memmodel import kv_cache_bytes
+    b, s, p = 1, 4096, 2
+    expected = b * s * cfg.n_layers * 2 * cfg.attn.n_kv_heads \
+        * cfg.attn.head_dim * p
+    assert kv_cache_bytes(cfg, b, s, p) == expected

@@ -1,0 +1,31 @@
+"""Straggler-mitigation hook: an artificially slow step must be detected."""
+import time
+
+import numpy as np
+
+from repro.core.config import ModelConfig, SSMConfig
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_straggler_detected():
+    cfg = ModelConfig(name="t", family="ssm", n_layers=2, d_model=32, d_ff=0,
+                      vocab_size=64,
+                      ssm=SSMConfig(d_state=8, headdim=8, chunk=8),
+                      layer_pattern=("mamba2",), vocab_pad_multiple=16)
+    t = Trainer(cfg, OptConfig(), TrainerConfig(steps=14, ckpt_every=0,
+                                                straggler_factor=2.5,
+                                                log_every=1000),
+                seq_len=32, global_batch=2)
+    base_fn = t.batch_fn
+
+    def slow_fn(step):
+        if step == 10:       # simulate one slow host at step 10
+            time.sleep(1.0)
+        return base_fn(step)
+
+    t.batch_fn = slow_fn
+    logs = []
+    st = t.run(log=logs.append)
+    assert st.straggler_steps >= 1
+    assert any("straggler" in l for l in logs)
