@@ -1,0 +1,171 @@
+"""Decode-path benchmark: per-token python loop vs the fused on-device loop.
+
+Measures TPOT (time per output token) and tokens/sec for the two decode
+drivers on a transformer, an SSM, and a hybrid config:
+
+  * ``loop``  — one jitted ``lm_decode_step`` per token, host argmax and a
+                device<->host token round-trip every step (the pre-fusion
+                serving path).
+  * ``fused`` — ``decode_tokens``: the whole burst inside one ``lax.scan``
+                with on-device argmax (one dispatch, zero per-token syncs).
+
+Results append the decode perf trajectory to ``BENCH_decode.json`` at the
+repo root.  ``--smoke`` runs the reduced sweep used by ``scripts/verify.sh``
+and asserts the fused loop is >= 2x the per-token loop.
+
+  PYTHONPATH=src python benchmarks/decode_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import AttnConfig, ModelConfig, SSMConfig
+from repro.models.lm import init_lm_cache, init_lm_params
+from repro.serving.engine import (make_decode_step, make_decode_tokens,
+                                  make_prefill_step)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(ROOT, "BENCH_decode.json")
+
+
+def bench_configs(d_model: int = 64):
+    attn = AttnConfig(n_heads=4, n_kv_heads=2, head_dim=d_model // 4)
+    return [
+        ModelConfig(name="transformer", family="dense", n_layers=4,
+                    d_model=d_model, d_ff=2 * d_model, vocab_size=256,
+                    attn=attn, layer_pattern=("dense",),
+                    vocab_pad_multiple=16),
+        ModelConfig(name="ssm", family="ssm", n_layers=4, d_model=d_model,
+                    d_ff=0, vocab_size=256,
+                    ssm=SSMConfig(d_state=16, headdim=16, chunk=16),
+                    layer_pattern=("mamba2",), vocab_pad_multiple=16),
+        ModelConfig(name="hybrid", family="hybrid", n_layers=4,
+                    d_model=d_model, d_ff=0, vocab_size=256,
+                    ssm=SSMConfig(d_state=16, headdim=16, chunk=16),
+                    layer_pattern=("mamba2", "mamba2+shared"),
+                    shared_attn=AttnConfig(n_heads=4, n_kv_heads=4,
+                                           head_dim=d_model // 4),
+                    shared_attn_d_ff=2 * d_model, vocab_pad_multiple=16),
+    ]
+
+
+def _prefilled(cfg, batch: int, plen: int, max_seq: int):
+    params = init_lm_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (batch, plen), 0,
+                                cfg.vocab_size, jnp.int32)
+    cache = init_lm_cache(cfg, batch, max_seq)
+    prefill = jax.jit(make_prefill_step(cfg))
+    logits, cache = prefill(params, {"tokens": prompt}, cache)
+    first = jnp.argmax(logits[..., :cfg.vocab_size], -1).astype(jnp.int32)
+    return params, cache, first
+
+
+def time_decoders(cfg, params, cache, first, gen_len: int,
+                  iters: int) -> Tuple[float, float]:
+    """Time (loop, fused) interleaved, best-of-iters each: alternating the
+    two drivers keeps a shared-machine throttle window from landing on only
+    one side of the ratio."""
+    step = jax.jit(make_decode_step(cfg))
+    decode_n = jax.jit(make_decode_tokens(cfg), static_argnames=("n",))
+
+    def run_loop():
+        # the pre-fusion driver: python loop, host round-trip per token
+        # exactly as the old greedy/engine loop did
+        c, tok = cache, first
+        for _ in range(gen_len):
+            logits, c = step(params, tok, c)
+            nxt = np.asarray(jnp.argmax(logits[:, 0, :cfg.vocab_size], -1),
+                             np.int32)
+            tok = jnp.asarray(nxt[:, None])
+        jax.block_until_ready(tok)
+
+    def run_fused():
+        toks, _ = decode_n(params, cache, first, n=gen_len)
+        jax.block_until_ready(toks)
+
+    run_loop(), run_fused()                 # warmup / compile
+    best_loop = best_fused = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run_loop()
+        best_loop = min(best_loop, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_fused()
+        best_fused = min(best_fused, time.perf_counter() - t0)
+    return best_loop, best_fused
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep + >=2x assertion (CI perf gate)")
+    ap.add_argument("--gen-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=0,
+                    help="0 = default (1 for --smoke: the paper's "
+                         "single-stream edge TPOT setting, else 2)")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+    gen_len = 64 if args.smoke else args.gen_len
+    batch = args.batch or (1 if args.smoke else 2)
+    iters = max(args.iters, 5) if args.smoke else args.iters
+
+    results = {}
+    for cfg in bench_configs():
+        params, cache, first = _prefilled(cfg, batch, 16, 16 + gen_len + 8)
+        t_loop, t_fused = time_decoders(cfg, params, cache, first,
+                                        gen_len, iters)
+        toks = batch * gen_len
+        row = {
+            "gen_len": gen_len,
+            "batch": batch,
+            "loop_tpot_ms": 1e3 * t_loop / gen_len,
+            "fused_tpot_ms": 1e3 * t_fused / gen_len,
+            "loop_tok_s": toks / t_loop,
+            "fused_tok_s": toks / t_fused,
+            "speedup": t_loop / t_fused,
+        }
+        results[cfg.name] = row
+        print(f"{cfg.name:12s} loop {row['loop_tpot_ms']:7.2f} ms/tok "
+              f"({row['loop_tok_s']:8.1f} tok/s) | fused "
+              f"{row['fused_tpot_ms']:7.2f} ms/tok "
+              f"({row['fused_tok_s']:8.1f} tok/s) | "
+              f"speedup {row['speedup']:.2f}x")
+
+    record = {"bench": "decode", "smoke": bool(args.smoke),
+              "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
+              "results": results}
+    runs = []
+    if os.path.exists(OUT_PATH):
+        try:
+            with open(OUT_PATH) as f:
+                runs = json.load(f).get("runs", [])
+        except (json.JSONDecodeError, OSError):
+            runs = []
+    runs.append(record)
+    with open(OUT_PATH, "w") as f:
+        json.dump({"bench": "decode", "runs": runs}, f, indent=2)
+    print(f"appended run {len(runs)} to {OUT_PATH}")
+
+    if args.smoke:
+        speedups = [r["speedup"] for r in results.values()]
+        gmean = float(np.exp(np.mean(np.log(speedups))))
+        worst = min(speedups)
+        # gate on the gmean only: per-config wall-clock on a shared host is
+        # too noisy for a hard per-config floor (min is still reported)
+        if gmean < 2.0:
+            raise SystemExit(
+                f"fused decode gmean only {gmean:.2f}x over the per-token "
+                f"loop (expected >= 2x; min {worst:.2f}x)")
+        print(f"smoke OK: gmean speedup {gmean:.2f}x (min {worst:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

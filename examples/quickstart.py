@@ -24,7 +24,9 @@ logits = jax.jit(lambda p, t: lm_forward(cfg, p, {"tokens": t},
                                          train=False))(params, tokens)
 print(f"forward: logits {logits.shape}")
 
-# 2. generate with the serving path (prefill + decode w/ SSM state cache)
+# 2. generate with the serving path: prefill + the fused decode loop —
+# the whole 8-token burst is ONE compiled program (lax.scan over
+# lm_decode_step, on-device argmax, zero host syncs per token)
 out, _ = greedy_generate(cfg, params, {"tokens": tokens}, max_seq=96,
                          gen_len=8)
 print(f"generated: {out.shape} -> {out[0].tolist()}")

@@ -1,5 +1,7 @@
 """Serve a small model with batched requests through the slot engine,
-mixing prompt lengths — exercises prefill-into-slot + batched decode.
+mixing prompt lengths — exercises batched prefill-into-slot admission plus
+the fused block-decode loop (``decode_block`` tokens per host iteration,
+per-slot positions, one device->host sync per block).
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -15,7 +17,7 @@ from repro.serving.engine import Request, ServingEngine
 
 cfg = reduced(get("zamba2-2.7b"))
 params = init_lm_params(cfg, jax.random.PRNGKey(0))
-eng = ServingEngine(cfg, params, slots=4, max_seq=160)
+eng = ServingEngine(cfg, params, slots=4, max_seq=160, decode_block=8)
 
 rng = np.random.default_rng(7)
 for i in range(10):
@@ -29,8 +31,9 @@ done = eng.run()
 dt = time.perf_counter() - t0
 toks = sum(len(r.out) for r in done)
 print(f"{len(done)} requests, {toks} new tokens in {dt:.1f}s "
-      f"({toks / dt:.1f} tok/s)")
+      f"({toks / dt:.1f} tok/s, block={eng.decode_block})")
 for r in sorted(done, key=lambda r: r.rid)[:3]:
     print(f"  rid={r.rid} out={r.out}")
 assert len(done) == 10
+assert all(len(r.out) >= r.max_new for r in done)
 print("OK")

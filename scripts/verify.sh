@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 gate + decode perf smoke in one command:
+#   bash scripts/verify.sh
+# Runs the tier-1 pytest command, then the decode perf smoke, and fails
+# if either failed (the smoke still runs when pre-existing tests fail,
+# so the perf trajectory is always recorded).
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+tier1=$?
+
+python benchmarks/decode_bench.py --smoke
+smoke=$?
+
+echo "tier1=$tier1 decode_smoke=$smoke"
+exit $(( tier1 || smoke ))

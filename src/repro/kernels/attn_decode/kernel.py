@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.dispatch import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -87,7 +89,7 @@ def decode_attention_pallas(q, k, v, *, valid_len, block_s: int = 1024,
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(vl, qg, k, v)

@@ -1,1 +1,1 @@
-from repro.kernels.conv1d.ops import causal_conv1d, conv1d_decode_step  # noqa: F401
+from repro.kernels.conv1d.ops import causal_conv1d  # noqa: F401

@@ -10,6 +10,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.dispatch import tpu_compiler_params
+
 
 def _conv_kernel(x_ref, w_ref, b_ref, init_ref, y_ref, carry, *,
                  k: int, bs: int, silu: bool):
@@ -59,7 +61,7 @@ def causal_conv1d_pallas(x, w, b, *, initial_state: Optional[jax.Array] = None,
         out_specs=pl.BlockSpec((1, bs, bc), lambda bi, ci, si: (bi, si, ci)),
         out_shape=jax.ShapeDtypeStruct((bsz, s, c), x.dtype),
         scratch_shapes=[pltpu.VMEM((k - 1, bc), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w, b, initial_state)

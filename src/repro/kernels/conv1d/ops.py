@@ -20,7 +20,5 @@ def causal_conv1d(x, w, b, *, initial_state: Optional[jax.Array] = None,
                                     activation=activation,
                                     interpret=(backend == "interpret"))
 
-
-def conv1d_decode_step(state, x_t, w, b, activation: str = "silu"):
-    with jax.named_scope("conv1d"):
-        return _ref.conv1d_decode_ref(state, x_t, w, b, activation)
+# The per-token conv decode step lives in kernels.decode_fused, fused with
+# the SSM state update (no standalone entry point anymore).

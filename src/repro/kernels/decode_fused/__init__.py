@@ -1,0 +1,3 @@
+from repro.kernels.decode_fused.ops import (  # noqa: F401
+    mamba1_decode_fused, mamba2_decode_fused,
+)

@@ -1,0 +1,180 @@
+"""Pallas TPU kernels for the fused decode step (conv shift + SSM update).
+
+The decode hot loop is memory-bound: per token each Mamba layer must read
+and rewrite its conv window and recurrent state.  Run eagerly, that is
+four HBM round-trips (conv read/write, state read/write) plus the
+intermediate dA/dBx tensors.  These kernels follow the paper's
+"minimize HBM I/O, keep state resident" discipline: one grid step per
+batch row pulls the row's working set into VMEM once, performs
+
+  conv window shift -> silu -> (projections) -> softplus(dt)
+  h' = h * exp(dt*A) + dt * B * x      y = C . h' + D * x
+
+in-register, and writes back only the new window, new state, and y.
+
+Grid: (B,) — rows are independent; everything per-row fits VMEM
+comfortably (largest real shape: [H, P, N] f32 state, a few MB).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu  # noqa: F401  (memory spaces)
+
+from repro.kernels.dispatch import tpu_compiler_params
+
+
+def _conv_step(conv_ref, x_ref, w_ref, b_ref):
+    """Shared conv shift step: returns (activated [1, C] f32, window [K, C])."""
+    window = jnp.concatenate([conv_ref[0].astype(jnp.float32),
+                              x_ref[...].astype(jnp.float32)], axis=0)
+    w = w_ref[...].astype(jnp.float32)                 # [C, K]
+    y = jnp.sum(window * w.T, axis=0, keepdims=True)   # [1, C]
+    y = y + b_ref[...].astype(jnp.float32).reshape(1, -1)
+    y = y * jax.nn.sigmoid(y)                          # silu
+    return y, window
+
+
+def _m2_kernel(conv_ref, x_ref, w_ref, b_ref, dt_ref, dtb_ref, al_ref, d_ref,
+               ssm_ref, y_ref, nconv_ref, nssm_ref, *,
+               di: int, g: int, n: int, h: int, p: int):
+    xbc, window = _conv_step(conv_ref, x_ref, w_ref, b_ref)
+    # match the ref's dtype round-trip at the conv boundary
+    xbc = xbc.astype(x_ref.dtype).astype(jnp.float32)
+    xs = xbc[0, :di].reshape(h, p)
+    bm = xbc[0, di:di + g * n].reshape(g, n)
+    cm = xbc[0, di + g * n:].reshape(g, n)
+    dt = jax.nn.softplus(dt_ref[...].astype(jnp.float32)
+                         + dtb_ref[...].astype(jnp.float32).reshape(1, -1))
+    a = -jnp.exp(al_ref[...].astype(jnp.float32)).reshape(1, -1)  # [1, H]
+    da = jnp.exp(dt * a)                               # [1, H]
+    bh = jnp.repeat(bm, h // g, axis=0)                # [H, N]
+    ch = jnp.repeat(cm, h // g, axis=0)
+    upd = (dt.T * bh)[:, None, :] * xs[:, :, None]     # [H, P, N]
+    hnew = ssm_ref[0] * da.T[:, :, None] + upd
+    y = jnp.sum(hnew * ch[:, None, :], axis=-1)        # [H, P]
+    y = y + xs * d_ref[...].astype(jnp.float32).reshape(-1, 1)
+    y_ref[0] = y.astype(y_ref.dtype)
+    nssm_ref[0] = hnew
+    nconv_ref[0] = window[1:].astype(nconv_ref.dtype)
+
+
+def mamba2_decode_fused_pallas(conv_state, ssm_state, xbc_t, conv_w, conv_b,
+                               dt_raw, dt_bias, A_log, D, *, n_groups: int,
+                               d_state: int, headdim: int,
+                               interpret: bool = False
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, km1, c = conv_state.shape
+    k = km1 + 1
+    g, n, p = n_groups, d_state, headdim
+    di = c - 2 * g * n
+    h = di // p
+    kern = functools.partial(_m2_kernel, di=di, g=g, n=n, h=h, p=p)
+    y, nconv, nssm = pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, k - 1, c), lambda bi: (bi, 0, 0)),
+            pl.BlockSpec((1, c), lambda bi: (bi, 0)),
+            pl.BlockSpec((c, k), lambda bi: (0, 0)),
+            pl.BlockSpec((c,), lambda bi: (0,)),
+            pl.BlockSpec((1, h), lambda bi: (bi, 0)),
+            pl.BlockSpec((h,), lambda bi: (0,)),
+            pl.BlockSpec((h,), lambda bi: (0,)),
+            pl.BlockSpec((h,), lambda bi: (0,)),
+            pl.BlockSpec((1, h, p, n), lambda bi: (bi, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, p), lambda bi: (bi, 0, 0)),
+            pl.BlockSpec((1, k - 1, c), lambda bi: (bi, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda bi: (bi, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, p), xbc_t.dtype),
+            jax.ShapeDtypeStruct((b, k - 1, c),
+                                 jnp.result_type(conv_state.dtype,
+                                                 xbc_t.dtype)),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(conv_state, xbc_t, conv_w, conv_b, dt_raw, dt_bias, A_log, D, ssm_state)
+    return y, nconv, nssm
+
+
+def _m1_kernel(conv_ref, x_ref, w_ref, b_ref, xp_ref, dtp_ref, dtb_ref,
+               al_ref, d_ref, ssm_ref, y_ref, nconv_ref, nssm_ref, *,
+               di: int, n: int, dtr: int):
+    xi, window = _conv_step(conv_ref, x_ref, w_ref, b_ref)
+    xi = xi.astype(x_ref.dtype).astype(jnp.float32)    # [1, di]
+    proj = jax.lax.dot(xi, xp_ref[...].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)  # [1, dtr+2N]
+    # the ref emits the projections in the input dtype — round to match
+    proj = proj.astype(x_ref.dtype).astype(jnp.float32)
+    dt_low = proj[:, :dtr]
+    bm = proj[:, dtr:dtr + n]                          # [1, N]
+    cm = proj[:, dtr + n:]                             # [1, N]
+    dt_in = jax.lax.dot(dt_low, dtp_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    dt_in = dt_in.astype(x_ref.dtype).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_in + dtb_ref[...].astype(jnp.float32).reshape(1, -1))  # [1, di]
+    a = -jnp.exp(al_ref[...].astype(jnp.float32))      # [di, N]
+    dA = jnp.exp(dt.T * a)                             # [di, N]
+    dBx = (dt * xi).T * bm                             # [di, N]
+    hnew = ssm_ref[0] * dA + dBx
+    y = jnp.sum(hnew * cm, axis=-1, keepdims=True).T   # [1, di]
+    y = y + xi * d_ref[...].astype(jnp.float32).reshape(1, -1)
+    y_ref[...] = y
+    nssm_ref[0] = hnew
+    nconv_ref[0] = window[1:].astype(nconv_ref.dtype)
+
+
+def mamba1_decode_fused_pallas(conv_state, ssm_state, xi_t, conv_w, conv_b,
+                               x_proj, dt_proj, dt_bias, A_log, D, *,
+                               d_state: int, dt_rank: int,
+                               interpret: bool = False
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, km1, di = conv_state.shape
+    k = km1 + 1
+    n, dtr = d_state, dt_rank
+    f = dtr + 2 * n
+    kern = functools.partial(_m1_kernel, di=di, n=n, dtr=dtr)
+    y, nconv, nssm = pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, k - 1, di), lambda bi: (bi, 0, 0)),
+            pl.BlockSpec((1, di), lambda bi: (bi, 0)),
+            pl.BlockSpec((di, k), lambda bi: (0, 0)),
+            pl.BlockSpec((di,), lambda bi: (0,)),
+            pl.BlockSpec((di, f), lambda bi: (0, 0)),
+            pl.BlockSpec((dtr, di), lambda bi: (0, 0)),
+            pl.BlockSpec((di,), lambda bi: (0,)),
+            pl.BlockSpec((di, n), lambda bi: (0, 0)),
+            pl.BlockSpec((di,), lambda bi: (0,)),
+            pl.BlockSpec((1, di, n), lambda bi: (bi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, di), lambda bi: (bi, 0)),
+            pl.BlockSpec((1, k - 1, di), lambda bi: (bi, 0, 0)),
+            pl.BlockSpec((1, di, n), lambda bi: (bi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, di), jnp.float32),
+            jax.ShapeDtypeStruct((b, k - 1, di),
+                                 jnp.result_type(conv_state.dtype,
+                                                 xi_t.dtype)),
+            jax.ShapeDtypeStruct((b, di, n), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(conv_state, xi_t, conv_w, conv_b, x_proj, dt_proj, dt_bias, A_log, D,
+      ssm_state)
+    return y, nconv, nssm

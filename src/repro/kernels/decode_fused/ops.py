@@ -1,0 +1,57 @@
+"""Backend-dispatching entry points for the fused decode step.
+
+One call = one Mamba layer's whole per-token recurrence: conv1d shift step,
+(for mamba1) the dt/B/C projections, softplus, and the state update
+``h' = h*exp(dt*A) + dt*B*x`` with readout ``y = C.h' + D*x``.  The "ref"
+backend is bitwise identical to the previously-inlined composition; the
+Pallas backend fuses it into one VMEM-resident kernel per batch row
+(interpret=True on CPU via ``REPRO_KERNEL_BACKEND=interpret``).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.decode_fused import ref as _ref
+
+
+def mamba2_decode_fused(conv_state, ssm_state, xbc_t, conv_w, conv_b,
+                        dt_raw, dt_bias, A_log, D, *, n_groups: int,
+                        d_state: int, headdim: int
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused Mamba-2 (SSD) decode step. Returns (y [B,H,P], conv', ssm')."""
+    backend = dispatch.get_backend()
+    with jax.named_scope("decode_fused"):
+        if backend == "ref":
+            return _ref.mamba2_decode_fused_ref(
+                conv_state, ssm_state, xbc_t, conv_w, conv_b, dt_raw,
+                dt_bias, A_log, D, n_groups=n_groups, d_state=d_state,
+                headdim=headdim)
+        from repro.kernels.decode_fused.kernel import \
+            mamba2_decode_fused_pallas
+        return mamba2_decode_fused_pallas(
+            conv_state, ssm_state, xbc_t, conv_w, conv_b, dt_raw, dt_bias,
+            A_log, D, n_groups=n_groups, d_state=d_state, headdim=headdim,
+            interpret=(backend == "interpret"))
+
+
+def mamba1_decode_fused(conv_state, ssm_state, xi_t, conv_w, conv_b,
+                        x_proj, dt_proj, dt_bias, A_log, D, *,
+                        d_state: int, dt_rank: int
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused Mamba-1 (S6) decode step. Returns (y [B,di] f32, conv', ssm')."""
+    backend = dispatch.get_backend()
+    with jax.named_scope("decode_fused"):
+        if backend == "ref":
+            return _ref.mamba1_decode_fused_ref(
+                conv_state, ssm_state, xi_t, conv_w, conv_b, x_proj,
+                dt_proj, dt_bias, A_log, D, d_state=d_state,
+                dt_rank=dt_rank)
+        from repro.kernels.decode_fused.kernel import \
+            mamba1_decode_fused_pallas
+        return mamba1_decode_fused_pallas(
+            conv_state, ssm_state, xi_t, conv_w, conv_b, x_proj, dt_proj,
+            dt_bias, A_log, D, d_state=d_state, dt_rank=dt_rank,
+            interpret=(backend == "interpret"))

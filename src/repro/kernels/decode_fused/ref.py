@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for the fused decode-step operators.
+
+These reproduce — op for op, cast for cast — the composition the Mamba
+blocks previously inlined (conv1d shift step -> projections -> state
+update), so routing the decode path through this module is bitwise
+identical on the "ref" backend.  The Pallas kernels in ``kernel.py`` fuse
+the same sequence into one VMEM-resident pass per batch row.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv1d.ref import conv1d_decode_ref
+from repro.kernels.ssd.ref import ssd_decode_ref
+
+
+def mamba2_decode_fused_ref(conv_state, ssm_state, xbc_t, conv_w, conv_b,
+                            dt_raw, dt_bias, A_log, D, *, n_groups: int,
+                            d_state: int, headdim: int
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """conv_state: [B,K-1,C]; ssm_state: [B,H,P,N]; xbc_t: [B,C] (pre-conv
+    packed x|B|C); dt_raw: [B,H].  Returns (y [B,H,P], conv_state',
+    ssm_state' [B,H,P,N] f32)."""
+    xbc, new_conv = conv1d_decode_ref(conv_state, xbc_t, conv_w, conv_b)
+    gn = n_groups * d_state
+    di = xbc.shape[-1] - 2 * gn
+    b = xbc.shape[0]
+    xs = xbc[..., :di]
+    bm = xbc[..., di:di + gn].reshape(b, n_groups, d_state)
+    cm = xbc[..., di + gn:].reshape(b, n_groups, d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + dt_bias.astype(jnp.float32))
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    y, new_ssm = ssd_decode_ref(ssm_state.astype(jnp.float32),
+                                xs.reshape(b, di // headdim, headdim),
+                                dt, A, bm, cm, D)
+    return y, new_conv, new_ssm
+
+
+def mamba1_decode_fused_ref(conv_state, ssm_state, xi_t, conv_w, conv_b,
+                            x_proj, dt_proj, dt_bias, A_log, D, *,
+                            d_state: int, dt_rank: int
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """conv_state: [B,K-1,di]; ssm_state: [B,di,N]; xi_t: [B,di] (pre-conv).
+    Returns (y [B,di] f32, conv_state', ssm_state' [B,di,N] f32)."""
+    xi, new_conv = conv1d_decode_ref(conv_state, xi_t, conv_w, conv_b)
+    dt_ = xi.dtype
+    proj = xi @ x_proj.astype(dt_)
+    dt_low = proj[..., :dt_rank]
+    bm = proj[..., dt_rank:dt_rank + d_state]
+    cm = proj[..., dt_rank + d_state:]
+    dt = jax.nn.softplus((dt_low @ dt_proj.astype(dt_)).astype(jnp.float32)
+                         + dt_bias.astype(jnp.float32))
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    h = ssm_state.astype(jnp.float32)
+    dA = jnp.exp(dt[..., None] * A[None])
+    dBx = (dt * xi.astype(jnp.float32))[..., None] \
+        * bm.astype(jnp.float32)[:, None, :]
+    h = h * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, cm.astype(jnp.float32))
+    y = y + xi.astype(jnp.float32) * D.astype(jnp.float32)
+    return y, new_conv, h

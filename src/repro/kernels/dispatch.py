@@ -6,8 +6,10 @@ Backends:
   * "pallas"    — Pallas TPU kernels (Mosaic). The deployment path on TPU.
   * "interpret" — Pallas kernels executed with interpret=True (CPU validation).
 
-Default: "ref" on CPU, "pallas" on TPU.  Override with set_backend() or the
-REPRO_KERNEL_BACKEND environment variable.
+Default: "ref" on CPU, "pallas" on TPU.  Override with set_backend(), the
+``use_backend`` context manager, or the REPRO_KERNEL_BACKEND environment
+variable (read once per call site: ``REPRO_KERNEL_BACKEND=interpret pytest``
+runs the whole suite through the Pallas interpreter).
 """
 from __future__ import annotations
 
@@ -17,6 +19,14 @@ import threading
 import jax
 
 _LOCAL = threading.local()
+
+
+def tpu_compiler_params(**kwargs):
+    """jax renamed pltpu.TPUCompilerParams -> CompilerParams across versions;
+    build whichever this install provides."""
+    import jax.experimental.pallas.tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
 
 
 def default_backend() -> str:

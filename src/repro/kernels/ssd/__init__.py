@@ -1,1 +1,1 @@
-from repro.kernels.ssd.ops import ssd_chunked, ssd_decode_step  # noqa: F401
+from repro.kernels.ssd.ops import ssd_chunked  # noqa: F401

@@ -38,9 +38,5 @@ def ssd_chunked_raw(x, dt_raw, dt_bias, A_log, Bm, Cm, D, *,
                        initial_state=initial_state)
 
 
-def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t, D
-                    ) -> Tuple[jax.Array, jax.Array]:
-    """One recurrent decode step (memory-bound; stays in jnp — a single
-    [B,H,P,N] elementwise update + tiny contraction has no kernel upside)."""
-    with jax.named_scope("ssd_core"):
-        return _ref.ssd_decode_ref(state, x_t, dt_t, A, B_t, C_t, D)
+# The per-token SSD decode step lives in kernels.decode_fused, fused with
+# the conv shift step (no standalone entry point anymore).

@@ -1,4 +1,4 @@
 from repro.models.lm import (  # noqa: F401
-    init_lm_cache, init_lm_params, lm_decode_step, lm_forward, lm_param_axes,
-    lm_prefill, model_param_defs,
+    decode_tokens, init_lm_cache, init_lm_params, lm_decode_step, lm_forward,
+    lm_param_axes, lm_prefill, model_param_defs,
 )

@@ -171,19 +171,21 @@ def _local_banded_attention(q, k, v, *, window: int) -> jax.Array:
     return out[:, :sq]
 
 
-def _decode_attention(q, k, v, *, valid_len, window: Optional[int],
-                      pos: jax.Array) -> jax.Array:
-    """q: [B,1,KV,G,hd]; k,v: full cache [B,Skv,KV,hd]; mask by valid_len."""
+def _decode_attention(q, k, v, *, valid_len,
+                      window: Optional[int]) -> jax.Array:
+    """q: [B,1,KV,G,hd]; k,v: full cache [B,Skv,KV,hd]; valid_len: [B]
+    per-row valid prefix lengths (slots decode at independent positions)."""
     with jax.named_scope("attn_core"):
         scale = 1.0 / math.sqrt(q.shape[-1])
         s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
                        preferred_element_type=jnp.float32) * scale
         kpos = jnp.arange(k.shape[1])[None, :]
-        mask = kpos < valid_len
+        vl = valid_len[:, None]
         if window is not None:
             # rolling cache: every slot is within the window by construction
-            mask = kpos < jnp.minimum(valid_len, window)
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+            vl = jnp.minimum(vl, window)
+        mask = kpos < vl                                   # [B, Skv]
+        s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
         return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
 
@@ -212,8 +214,12 @@ def attention(p: Dict, x: jax.Array, a: AttnConfig, *,
     if rope is not None:
         sin, cos = rope
         if cache is not None and s == 1:
-            sin = jax.lax.dynamic_slice_in_dim(sin, pos, 1, axis=0)[None]
-            cos = jax.lax.dynamic_slice_in_dim(cos, pos, 1, axis=0)[None]
+            # per-row positions: pos is [B] (scalar broadcasts for old callers)
+            posv = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
+            # clip like the dynamic_slice this replaces (an overrun row —
+            # e.g. a retired engine slot — must stay finite, not NaN-fill)
+            sin = jnp.take(sin, posv, axis=0, mode="clip")[:, None]
+            cos = jnp.take(cos, posv, axis=0, mode="clip")[:, None]
             q = apply_rope(q, sin, cos)
             k = apply_rope(k, sin, cos)
         else:
@@ -259,13 +265,26 @@ def attention(p: Dict, x: jax.Array, a: AttnConfig, *,
                 cache["v"], vw, 0, axis=1)
             new_cache = {"k": kfull, "v": vfull}
     else:
-        # decode step
+        # decode step: each batch row writes its new kv at its own position
+        # (pos: [B] per-slot counters; scalar pos broadcasts).  Per-row
+        # dynamic-slice write so the token touches one cache row, not the
+        # whole [Skv] axis; out-of-range rows (retired slots) rewrite their
+        # clamped row with its current value, i.e. write nothing.
         skv = cache["k"].shape[1]
-        slot = pos % skv if (window is not None and skv == window) else pos
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        posv = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
+        slot = posv % skv if (window is not None and skv == window) else posv
+        ok = (slot >= 0) & (slot < skv)
+        slot_c = jnp.clip(slot, 0, skv - 1)
+
+        def _write_row(full, new, start, keep):
+            cur = jax.lax.dynamic_slice_in_dim(full, start, 1, axis=0)
+            return jax.lax.dynamic_update_slice_in_dim(
+                full, jnp.where(keep, new, cur), start, axis=0)
+
+        kc = jax.vmap(_write_row)(cache["k"], k.astype(cache["k"].dtype),
+                                  slot_c, ok)
+        vc = jax.vmap(_write_row)(cache["v"], v.astype(cache["v"].dtype),
+                                  slot_c, ok)
         kc = constrain(kc, ("batch", "kv_seq", "kv_heads", None))
         vc = constrain(vc, ("batch", "kv_seq", "kv_heads", None))
         new_cache = {"k": kc, "v": vc}
@@ -281,14 +300,15 @@ def attention(p: Dict, x: jax.Array, a: AttnConfig, *,
             from repro.kernels.attn_decode.ops import decode_attention
             bq, _, nkv_, g_, hd_ = q.shape
             qh = q.reshape(bq, nkv_ * g_, hd_)
-            valid = jnp.minimum(pos + 1, kc.shape[1])
+            valid = jnp.minimum(posv + 1, kc.shape[1])
             o = decode_attention(qh, kcr.transpose(0, 2, 1, 3),
                                  vcr.transpose(0, 2, 1, 3),
                                  valid_len=valid)
             o = o.reshape(bq, 1, nkv_, g_, hd_)
         else:
             o = _decode_attention(q, kcr, vcr,
-                                  valid_len=pos + 1, window=window, pos=pos)
+                                  valid_len=jnp.minimum(posv + 1, skv),
+                                  window=window)
 
     o = o.reshape(b, s, a.n_heads, a.head_dim)
     with jax.named_scope("o_proj"):

@@ -4,7 +4,24 @@ One code path serves every assigned architecture: dense / local:global /
 MoE / SSM / hybrid / encoder-only / modality-stub models, selected purely by
 ``ModelConfig``.  Layers are grouped into repeating units and executed with
 ``lax.scan`` over stacked params (compact HLO; trip counts recoverable by the
-HLO cost analyzer)."""
+HLO cost analyzer).
+
+Decode API
+----------
+The cache built by :func:`init_lm_cache` carries a per-row position vector
+``pos: [B] int32`` so every batch slot decodes at its own offset (the
+serving engine admits requests at different times).  Three entry points:
+
+* :func:`lm_prefill` — process the prompt, fill the cache.
+* :func:`lm_decode_step` — one token for all rows (``token: [B, 1]``).
+* :func:`decode_tokens` — the fused multi-token loop: runs ``n`` greedy (or
+  temperature-sampled) steps inside a single ``jax.lax.scan`` with on-device
+  token selection, so a whole generation burst is one compiled program with
+  zero host round-trips per token.  This is the serving fast path.
+
+Mamba decode steps route through the fused conv-shift + state-update
+kernels in ``repro.kernels.decode_fused`` (backend selected by
+``REPRO_KERNEL_BACKEND`` / ``repro.kernels.dispatch``)."""
 from __future__ import annotations
 
 from typing import Any, Dict, Optional, Tuple
@@ -68,7 +85,7 @@ def init_lm_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
             for kind in unit)
         segs.append(jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (n_rep,) + x.shape), unit_cache))
-    return {"segments": segs, "pos": jnp.zeros((), jnp.int32)}
+    return {"segments": segs, "pos": jnp.zeros((batch,), jnp.int32)}
 
 
 # --------------------------------------------------------------------------
@@ -197,13 +214,14 @@ def lm_prefill(cfg: ModelConfig, params, inputs: Dict[str, jax.Array], cache,
                                 rope_local=rope_local, train=False)
     logits = _head(cfg, params, x[:, -1:])
     return logits, {"segments": new_segs,
-                    "pos": jnp.asarray(seq, jnp.int32)}
+                    "pos": jnp.full((x.shape[0],), seq, jnp.int32)}
 
 
 def lm_decode_step(cfg: ModelConfig, params, token: jax.Array, cache, *,
                    kv_repeat: int = 1, shared_kv_repeat: int = 1,
                    moe_groups: int = 1) -> Tuple[jax.Array, Any]:
-    """One token step. token: [B, 1] int32 (or features [B,1,feat])."""
+    """One token step. token: [B, 1] int32 (or features [B,1,feat]).
+    ``cache["pos"]`` is a [B] vector: rows may sit at different offsets."""
     pos = cache["pos"]
     inputs = {"tokens": token} if token.ndim == 2 else {"features": token}
     x = _embed(cfg, params, inputs)
@@ -216,6 +234,49 @@ def lm_decode_step(cfg: ModelConfig, params, token: jax.Array, cache, *,
                                 rope_local=rope_local, train=False)
     logits = _head(cfg, params, x)
     return logits, {"segments": new_segs, "pos": pos + 1}
+
+
+def decode_tokens(cfg: ModelConfig, params, cache, first_token: jax.Array,
+                  n: int, *, kv_repeat: int = 1, shared_kv_repeat: int = 1,
+                  moe_groups: int = 1, temperature: float = 0.0,
+                  rng: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, Any]:
+    """Fused multi-token decode: run ``n`` generation steps inside one
+    ``jax.lax.scan``.
+
+    ``first_token`` ([B, 1] int32) is fed to the first step; every
+    subsequent input token is selected on device (greedy argmax, or
+    categorical sampling when ``temperature > 0`` with ``rng``), so the
+    whole burst compiles to a single program with no host synchronisation
+    per token.  Returns ``(tokens [B, n] int32, cache)`` — token ``[:, i]``
+    is the model's output after consuming the (i-1)-th emitted token,
+    exactly matching ``n`` sequential :func:`lm_decode_step` calls.
+    """
+    sample = temperature > 0.0
+    if sample and rng is None:
+        raise ValueError("temperature sampling requires an rng key")
+
+    def select(logits: jax.Array, key) -> jax.Array:
+        lg = logits[:, 0, :cfg.vocab_size]
+        if sample:
+            nxt = jax.random.categorical(key, lg / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        return nxt.astype(jnp.int32)[:, None]              # [B, 1]
+
+    def step(carry, key):
+        tok, c = carry
+        logits, c = lm_decode_step(cfg, params, tok, c, kv_repeat=kv_repeat,
+                                   shared_kv_repeat=shared_kv_repeat,
+                                   moe_groups=moe_groups)
+        nxt = select(logits, key)
+        return (nxt, c), nxt[:, 0]
+
+    # keys are presplit outside the scan; greedy mode carries none at all
+    keys = jax.random.split(rng, n) if sample else None
+    (_, cache), toks = jax.lax.scan(
+        step, (first_token.astype(jnp.int32), cache), keys, length=n)
+    return toks.T, cache                                   # [B, n]
 
 
 def _cache_max_seq(cfg: ModelConfig, cache) -> Optional[int]:

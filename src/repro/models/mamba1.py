@@ -12,7 +12,8 @@ import jax.numpy as jnp
 
 from repro.core.config import SSMConfig
 from repro.distributed.sharding import constrain
-from repro.kernels.conv1d.ops import causal_conv1d, conv1d_decode_step
+from repro.kernels.conv1d.ops import causal_conv1d
+from repro.kernels.decode_fused.ops import mamba1_decode_fused
 from repro.models.params import ParamDef
 
 
@@ -122,31 +123,18 @@ def mamba1_block(p: Dict, x: jax.Array, s: SSMConfig, d_model: int, *,
 
 def mamba1_decode(p: Dict, x: jax.Array, s: SSMConfig, d_model: int, *,
                   cache: Dict, eps: float = 1e-5) -> Tuple[jax.Array, Dict]:
-    di = s.d_inner(d_model)
+    """Single-token step; conv shift + dt/B/C projections + S6 state update
+    run as one fused decode kernel."""
     dtr = dt_rank(d_model, s)
     dt_ = x.dtype
     xt = x[:, 0]
     with jax.named_scope("ssm_in_proj"):
         xi = xt @ p["wx"].astype(dt_)
         z = xt @ p["wz"].astype(dt_)
-    xi, conv_state = conv1d_decode_step(cache["conv"], xi,
-                                        p["conv_w"], p["conv_b"])
-    with jax.named_scope("ssm_in_proj"):
-        proj = xi @ p["x_proj"].astype(dt_)
-        dt_low, bm, cm = (proj[..., :dtr], proj[..., dtr:dtr + s.d_state],
-                          proj[..., dtr + s.d_state:])
-        dt = jax.nn.softplus((dt_low @ p["dt_proj"].astype(dt_)
-                              ).astype(jnp.float32)
-                             + p["dt_bias"].astype(jnp.float32))
-    with jax.named_scope("ssm_core"):
-        A = -jnp.exp(p["A_log"].astype(jnp.float32))
-        h = cache["ssm"]
-        dA = jnp.exp(dt[..., None] * A[None])
-        dBx = (dt * xi.astype(jnp.float32))[..., None] \
-            * bm.astype(jnp.float32)[:, None, :]
-        h = h * dA + dBx
-        y = jnp.einsum("bdn,bn->bd", h, cm.astype(jnp.float32))
-        y = y + xi.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y, conv_state, h = mamba1_decode_fused(
+        cache["conv"], cache["ssm"], xi, p["conv_w"], p["conv_b"],
+        p["x_proj"], p["dt_proj"], p["dt_bias"], p["A_log"], p["D"],
+        d_state=s.d_state, dt_rank=dtr)
     with jax.named_scope("ssm_gate"):
         y = y * jax.nn.silu(z.astype(jnp.float32))
     with jax.named_scope("ssm_out_proj"):

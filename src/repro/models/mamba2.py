@@ -8,9 +8,9 @@ import jax.numpy as jnp
 
 from repro.core.config import SSMConfig
 from repro.distributed.sharding import constrain
-from repro.kernels.conv1d.ops import causal_conv1d, conv1d_decode_step
-from repro.kernels.ssd.ops import (ssd_chunked, ssd_chunked_raw,
-                                   ssd_decode_step)
+from repro.kernels.conv1d.ops import causal_conv1d
+from repro.kernels.decode_fused.ops import mamba2_decode_fused
+from repro.kernels.ssd.ops import ssd_chunked_raw
 from repro.models.norms import gated_rms_norm
 from repro.models.params import ParamDef
 
@@ -95,25 +95,20 @@ def mamba2_block(p: Dict, x: jax.Array, s: SSMConfig, d_model: int, *,
 
 def mamba2_decode(p: Dict, x: jax.Array, s: SSMConfig, d_model: int, *,
                   cache: Dict, eps: float = 1e-5) -> Tuple[jax.Array, Dict]:
-    """Single-token step. x: [B, 1, D]; cache: {"conv": [B,K-1,C], "ssm": [B,H,P,N]}."""
+    """Single-token step. x: [B, 1, D]; cache: {"conv": [B,K-1,C], "ssm": [B,H,P,N]}.
+    Conv shift + state update run as one fused decode kernel."""
     b = x.shape[0]
     di = s.d_inner(d_model)
-    nh = s.n_ssm_heads(d_model)
     dt_ = x.dtype
     xt = x[:, 0]
     with jax.named_scope("ssm_in_proj"):
         z = xt @ p["wz"].astype(dt_)
         xbc = xt @ p["wxBC"].astype(dt_)
         dt_raw = xt @ p["wdt"].astype(dt_)
-    xbc, conv_state = conv1d_decode_step(cache["conv"], xbc,
-                                         p["conv_w"], p["conv_b"])
-    xs, bm, cm = _split_xbc(xbc, s, d_model)
-    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
-                         + p["dt_bias"].astype(jnp.float32))
-    A = -jnp.exp(p["A_log"].astype(jnp.float32))
-    y, ssm_state = ssd_decode_step(cache["ssm"].astype(jnp.float32),
-                                   xs.reshape(b, nh, s.headdim), dt, A,
-                                   bm, cm, p["D"])
+    y, conv_state, ssm_state = mamba2_decode_fused(
+        cache["conv"], cache["ssm"], xbc, p["conv_w"], p["conv_b"],
+        dt_raw, p["dt_bias"], p["A_log"], p["D"],
+        n_groups=s.n_groups, d_state=s.d_state, headdim=s.headdim)
     y = y.reshape(b, di)
     y = gated_rms_norm(y[:, None, :], z[:, None, :], p["norm_scale"], eps)[:, 0]
     with jax.named_scope("ssm_out_proj"):

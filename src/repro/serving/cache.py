@@ -37,7 +37,9 @@ def extract_slot(cache: Any, b: int) -> Any:
             return leaf
         return jax.lax.dynamic_slice_in_dim(leaf, b, 1, axis=1)
     segs = [jax.tree_util.tree_map(pick, seg) for seg in cache["segments"]]
-    return {"segments": segs, "pos": cache["pos"]}
+    # pos is [B] (batch on axis 0, unlike the [n_rep, B, ...] segment leaves)
+    return {"segments": segs,
+            "pos": jax.lax.dynamic_slice_in_dim(cache["pos"], b, 1, axis=0)}
 
 
 def insert_slot(cache: Any, one: Any, b: int) -> Any:
@@ -49,7 +51,9 @@ def insert_slot(cache: Any, one: Any, b: int) -> Any:
             full, single.astype(full.dtype), b, axis=1)
     segs = [jax.tree_util.tree_map(ins, fs, ss)
             for fs, ss in zip(cache["segments"], one["segments"])]
-    return {"segments": segs, "pos": cache["pos"]}
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], one["pos"].astype(cache["pos"].dtype), b, axis=0)
+    return {"segments": segs, "pos": pos}
 
 
 def offload_slot(cache: Any, b: int) -> Dict[str, np.ndarray]:

@@ -4,13 +4,19 @@ engine (continuous-batching-lite).
 ``serve_step`` (the decode shape lowered by the dry-run) is one new token
 against a KV/state cache of the workload's seq_len, exactly per the
 assignment.  The engine keeps a fixed batch of slots; finished sequences
-are replaced by newly prefied prompts whose per-layer cache slices are
+are replaced by newly prefilled prompts whose per-layer cache slices are
 scattered into the batch cache.
+
+Decode is the fused on-device loop (:func:`repro.models.lm.decode_tokens`):
+each engine iteration advances every live slot by ``decode_block`` tokens
+inside one compiled ``lax.scan`` — on-device argmax, a single
+device->host transfer per block instead of one per token.  The cache
+carries a per-slot ``pos`` vector, so slots admitted at different times
+decode at their own offsets (no shared position counter).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -19,8 +25,8 @@ import numpy as np
 
 from repro.core.config import ModelConfig
 from repro.distributed.sharding import ShardingPlan
-from repro.models.lm import (init_lm_cache, lm_decode_step, lm_forward,
-                             lm_prefill)
+from repro.models.lm import (decode_tokens, init_lm_cache, lm_decode_step,
+                             lm_forward, lm_prefill)
 
 
 def make_prefill_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
@@ -45,6 +51,18 @@ def make_decode_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
     return decode_step
 
 
+def make_decode_tokens(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
+    """Builder for the fused multi-token decode loop (jit with n static)."""
+    kv_repeat = plan.kv_repeat if plan else 1
+    moe_groups = plan.moe_groups if plan else 1
+
+    def decode_n(params, cache, first_token, n: int):
+        return decode_tokens(cfg, params, cache, first_token, n,
+                             kv_repeat=kv_repeat, moe_groups=moe_groups)
+
+    return decode_n
+
+
 def make_encode_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
     """Encoder-only archs (hubert): one full forward is the serve step."""
     kv_repeat = plan.kv_repeat if plan else 1
@@ -60,19 +78,19 @@ def greedy_generate(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
                     max_seq: int, gen_len: int,
                     plan: Optional[ShardingPlan] = None
                     ) -> Tuple[jax.Array, Any]:
-    """Prefill + greedy decode loop (used by examples/tests)."""
+    """Prefill + fused greedy decode: the whole generation burst runs as a
+    single compiled program (no host round-trip per token)."""
     batch = next(iter(inputs.values())).shape[0]
     kv_repeat = plan.kv_repeat if plan else 1
     cache = init_lm_cache(cfg, batch, max_seq, kv_repeat=kv_repeat)
     prefill = jax.jit(make_prefill_step(cfg, plan))
-    decode = jax.jit(make_decode_step(cfg, plan))
+    decode_n = jax.jit(make_decode_tokens(cfg, plan), static_argnames=("n",))
     logits, cache = prefill(params, inputs, cache)
-    toks = [jnp.argmax(logits[..., :cfg.vocab_size], -1).astype(jnp.int32)]
-    for _ in range(gen_len - 1):
-        logits, cache = decode(params, toks[-1], cache)
-        toks.append(jnp.argmax(logits[..., :cfg.vocab_size], -1)
-                    .astype(jnp.int32))
-    return jnp.concatenate(toks, axis=1), cache
+    first = jnp.argmax(logits[..., :cfg.vocab_size], -1).astype(jnp.int32)
+    if gen_len <= 1:
+        return first, cache
+    rest, cache = decode_n(params, cache, first, n=gen_len - 1)
+    return jnp.concatenate([first, rest], axis=1), cache
 
 
 # ---------------------------------------------------------------------------
@@ -88,35 +106,54 @@ class Request:
     done: bool = False
 
 
-def _scatter_slot(batch_cache, slot_cache, b: int):
-    """Insert a batch-1 cache into slot b of the batch cache (per leaf the
-    batch dim is axis 1: caches are stacked [n_rep, B, ...])."""
+def _scatter_group(batch_cache, src_cache, dst: jax.Array):
+    """Insert every row of a batch-k prefill cache into slots ``dst`` ([k])
+    of the batch cache in one call (per leaf the batch dim is axis 1:
+    caches are stacked [n_rep, B, ...]).  Jitted by the engine so a whole
+    admission group lands in a single dispatch instead of one full-cache
+    copy per request."""
     def ins(full, one):
         if full.ndim == 0 or one is None:
             return full
-        return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype),
-                                                   b, axis=1)
+
+        def body(i, acc):
+            sl = jax.lax.dynamic_slice_in_dim(one, i, 1, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(
+                acc, sl.astype(acc.dtype), dst[i], axis=1)
+
+        return jax.lax.fori_loop(0, one.shape[1], body, full)
     segs = [jax.tree_util.tree_map(ins, fs, ss)
-            for fs, ss in zip(batch_cache["segments"], slot_cache["segments"])]
+            for fs, ss in zip(batch_cache["segments"], src_cache["segments"])]
     return {"segments": segs, "pos": batch_cache["pos"]}
 
 
 class ServingEngine:
-    """Fixed-slot continuous batching. Decode advances all live slots each
-    step; finished slots are refilled from the queue via single-sequence
-    prefill + cache scatter."""
+    """Fixed-slot continuous batching over the fused decode loop.
+
+    Each :meth:`step` admits queued prompts into free slots (batched
+    same-length prefills into preallocated cache templates — no per-admission
+    allocation), then decodes ``decode_block`` tokens for every slot in one
+    compiled loop.  Per-slot ``pos`` means late-admitted slots attend only
+    over their own valid cache rows.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int, max_seq: int,
-                 plan: Optional[ShardingPlan] = None):
+                 plan: Optional[ShardingPlan] = None, decode_block: int = 8):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
+        self.decode_block = decode_block
         kv_repeat = plan.kv_repeat if plan else 1
         self.cache = init_lm_cache(cfg, slots, max_seq, kv_repeat=kv_repeat)
-        self._prefill1 = jax.jit(make_prefill_step(cfg, plan))
-        self._decode = jax.jit(make_decode_step(cfg, plan))
+        self._prefill = jax.jit(make_prefill_step(cfg, plan))
+        self._decode_n = jax.jit(make_decode_tokens(cfg, plan),
+                                 static_argnames=("n",))
+        self._scatter = jax.jit(_scatter_group)
         self.kv_repeat = kv_repeat
+        # preallocated prefill cache templates keyed by admission batch size
+        # (prefill is functional, so one template serves every admission)
+        self._templates: Dict[int, Any] = {}
         self.live: List[Optional[Request]] = [None] * slots
         self.tokens = np.zeros((slots, 1), np.int32)
         self.pos = np.zeros((slots,), np.int64)
@@ -126,42 +163,71 @@ class ServingEngine:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def _template(self, batch: int):
+        """Preallocated prefill cache templates.  Admission only ever uses
+        batch sizes 1 and ``slots``, so at most two templates are built and
+        both are reused for every subsequent admission."""
+        if batch not in self._templates:
+            self._templates[batch] = init_lm_cache(
+                self.cfg, batch, self.max_seq, kv_repeat=self.kv_repeat)
+        return self._templates[batch]
+
     def _admit(self) -> None:
-        for b in range(self.slots):
-            if self.live[b] is None and self.queue:
-                req = self.queue.pop(0)
-                one = init_lm_cache(self.cfg, 1, self.max_seq,
-                                    kv_repeat=self.kv_repeat)
-                logits, one = self._prefill1(
-                    self.params, {"tokens": jnp.asarray(req.prompt[None])},
-                    one)
-                self.cache = _scatter_slot(self.cache, one, b)
-                tok = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
-                req.out.append(tok)
-                self.tokens[b, 0] = tok
+        free = [b for b in range(self.slots) if self.live[b] is None]
+        batch: List[Tuple[int, Request]] = []
+        while free and self.queue:
+            batch.append((free.pop(0), self.queue.pop(0)))
+        if not batch:
+            return
+        # one batched prefill per prompt length (stale rows beyond the
+        # prompt are masked by the per-slot pos, so templates need no reset)
+        by_len: Dict[int, List[Tuple[int, Request]]] = {}
+        for b, req in batch:
+            by_len.setdefault(len(req.prompt), []).append((b, req))
+        # bound XLA compiles to two prefill shapes per prompt length
+        # (batch 1 and batch slots): intermediate group sizes admit singly
+        groups: List[List[Tuple[int, Request]]] = []
+        for group in by_len.values():
+            if len(group) == self.slots:
+                groups.append(group)
+            else:
+                groups.extend([m] for m in group)
+        for group in groups:
+            prompts = jnp.asarray(np.stack([req.prompt for _, req in group]))
+            logits, one = self._prefill(self.params, {"tokens": prompts},
+                                        self._template(len(group)))
+            nxt = np.asarray(
+                jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1), np.int32)
+            dst = jnp.asarray([b for b, _ in group], jnp.int32)
+            self.cache = self._scatter(self.cache, one, dst)
+            for i, (b, req) in enumerate(group):
+                req.out.append(int(nxt[i]))
+                self.tokens[b, 0] = int(nxt[i])
                 self.pos[b] = len(req.prompt)
                 self.live[b] = req
 
     def step(self) -> int:
-        """One engine iteration. Returns number of live sequences."""
+        """One engine iteration: admit, then decode a ``decode_block``-token
+        burst for all slots on device. Returns number of live + queued."""
         self._admit()
-        if not any(self.live):
+        if not any(req is not None for req in self.live):
             return 0
-        # NOTE: single shared pos counter in the cache; slots admitted later
-        # waste a few cache rows — acceptable for the example engine.
-        self.cache = dict(self.cache, pos=jnp.asarray(
-            int(self.pos.max()), jnp.int32))
-        logits, self.cache = self._decode(self.params,
-                                          jnp.asarray(self.tokens), self.cache)
-        nxt = np.asarray(jnp.argmax(
-            logits[:, 0, :self.cfg.vocab_size], -1), np.int32)
+        kblk = self.decode_block
+        self.cache = dict(self.cache, pos=jnp.asarray(self.pos, jnp.int32))
+        toks, self.cache = self._decode_n(self.params, self.cache,
+                                          jnp.asarray(self.tokens), n=kblk)
+        toks = np.asarray(toks)                     # one host sync per block
         n_live = 0
         for b, req in enumerate(self.live):
             if req is None:
                 continue
-            req.out.append(int(nxt[b]))
-            self.tokens[b, 0] = int(nxt[b])
-            self.pos[b] += 1
+            room = min(req.max_new - len(req.out),
+                       self.max_seq - 1 - int(self.pos[b]))
+            take = min(kblk, max(room, 0))
+            req.out.extend(int(t) for t in toks[b, :take])
+            if take:
+                self.tokens[b, 0] = int(toks[b, take - 1])
+            self.pos[b] += take
             if len(req.out) >= req.max_new or self.pos[b] >= self.max_seq - 1:
                 req.done = True
                 self.finished.append(req)

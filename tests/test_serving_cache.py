@@ -26,8 +26,10 @@ def test_slot_roundtrip():
         lambda x: (jax.numpy.ones_like(x) * 7 if x.ndim else x), cache)
     one = extract_slot(cache, 1)
     for leaf in jax.tree_util.tree_leaves(one):
-        if leaf.ndim:
+        if leaf.ndim > 1:            # segment leaves: [n_rep, B, ...]
             assert leaf.shape[1] == 1
+        elif leaf.ndim:              # pos vector: [B]
+            assert leaf.shape[0] == 1
     blob = offload_slot(cache, 1)
     fresh = init_lm_cache(cfg, 3, 32)
     fresh = restore_slot(fresh, blob, 2)
