@@ -4,12 +4,18 @@
    (hardware-aware reformulation) measured as real CPU wall-clock — the
    chunked form's matmul structure wins on any hardware with dense units.
 2. VMEM working-set check for the Pallas SSD kernel block shapes (static).
+3. Serving kernels (paper Fig. 7 operator breakdown coverage): the fused
+   mamba1/mamba2 decode steps and the chunk-prefill attention shape (a
+   query chunk at a KV offset against a long cache prefix).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode_fused.ref import (mamba1_decode_fused_ref,
+                                            mamba2_decode_fused_ref)
+from repro.kernels.flash.ref import attention_ref
 from repro.kernels.ssd.ref import ssd_chunked_ref, ssd_sequential
 from benchmarks.common import Emitter, wall_time
 
@@ -45,3 +51,58 @@ def run(em: Emitter) -> None:
     ws2 = (bq * d + 2 * bk * d + bq * bk + bq * d) * 4
     em.emit("kernel.flash.vmem_working_set", ws2,
             f"{ws2 / 1024:.0f}KB_fits_vmem={'yes' if ws2 < VMEM_BYTES else 'no'}")
+
+    # chunk-prefill attention shape: a 512-token query chunk at a KV offset
+    # against an 8K cache prefix (the serving prefill inner loop)
+    kq = jax.random.split(key, 3)
+    d = 64
+    qc = jax.random.normal(kq[0], (1, 8, 512, d), jnp.float32)
+    kc = jax.random.normal(kq[1], (1, 2, 8192, d), jnp.float32)
+    vc = jax.random.normal(kq[2], (1, 2, 8192, d), jnp.float32)
+    off = jnp.full((1,), 7680, jnp.int32)            # last chunk of 8K
+    f_chunk = jax.jit(lambda q, k, v, o: attention_ref(
+        q, k, v, causal=True, q_offset=o))
+    t_chunk = wall_time(f_chunk, qc, kc, vc, off)
+    em.emit("kernel.flash.chunk_prefill.q512_kv8192", t_chunk * 1e6,
+            "offset_causal_chunk_vs_full_cache")
+
+    # fused decode steps (serving decode inner loop, per engine iteration)
+    bsz, dm = 8, 256
+    di, nh, pp, ng, nn = 2 * dm, (2 * dm) // 64, 64, 1, 64
+    conv_k = 4
+    conv_dim = di + 2 * ng * nn
+    km = jax.random.split(key, 9)
+    f_m2 = jax.jit(lambda cs, hs, xbc, w, bb, dtr, dtb, al, dd:
+                   mamba2_decode_fused_ref(cs, hs, xbc, w, bb, dtr, dtb,
+                                           al, dd, n_groups=ng, d_state=nn,
+                                           headdim=pp))
+    t_m2 = wall_time(
+        f_m2,
+        jax.random.normal(km[0], (bsz, conv_k - 1, conv_dim)),
+        jax.random.normal(km[1], (bsz, nh, pp, nn)),
+        jax.random.normal(km[2], (bsz, conv_dim)),
+        jax.random.normal(km[3], (conv_dim, conv_k)),
+        jnp.zeros((conv_dim,)),
+        jax.random.normal(km[4], (bsz, nh)),
+        jnp.zeros((nh,)), jnp.zeros((nh,)), jnp.ones((nh,)))
+    em.emit("kernel.decode_fused.mamba2.b8_d256", t_m2 * 1e6,
+            "fused_conv_shift+ssd_state_update")
+    dtr_rank, ns1 = 16, 16
+    f_m1 = jax.jit(lambda cs, hs, xi, w, bb, xp, dp, dtb, al, dd:
+                   mamba1_decode_fused_ref(cs, hs, xi, w, bb, xp, dp, dtb,
+                                           al, dd, d_state=ns1,
+                                           dt_rank=dtr_rank))
+    t_m1 = wall_time(
+        f_m1,
+        jax.random.normal(km[5], (bsz, conv_k - 1, di)),
+        jax.random.normal(km[6], (bsz, di, ns1)),
+        jax.random.normal(km[7], (bsz, di)),
+        jax.random.normal(km[8], (di, conv_k)),
+        jnp.zeros((di,)),
+        jax.random.normal(km[0], (di, dtr_rank + 2 * ns1)),
+        jax.random.normal(km[1], (dtr_rank, di)),
+        jnp.zeros((di,)),
+        jax.random.normal(km[2], (di, ns1)),
+        jnp.ones((di,)))
+    em.emit("kernel.decode_fused.mamba1.b8_d256", t_m1 * 1e6,
+            "fused_conv_shift+s6_state_update")

@@ -1,0 +1,238 @@
+"""Chunked-prefill benchmark: TTFT vs context length, peak-activation
+memory, and prefill/decode interleaving fairness.
+
+For each config and prompt length the bench compares
+
+  * ``oneshot`` — monolithic ``lm_prefill`` over the whole prompt: one
+                  O(L) program whose activation footprint grows with L.
+  * ``chunked`` — the serving path (``repro.serving.prefill``): the same
+                  prompt through the fixed-shape ``lm_prefill_chunk``
+                  program ceil(L/chunk) times with state carried between
+                  chunks.
+
+reporting TTFT (wall-clock to first token, best-of-iters) and XLA's
+compiled temp buffer size (``memory_analysis().temp_size_in_bytes`` —
+the peak intermediate-activation allocation of one dispatch).  A second
+section runs a mixed serving workload (one long prompt + several short
+ones) through ``ServingEngine`` and reports interleaving fairness: the
+fraction of engine iterations that ran a prefill chunk alongside live
+decode slots in which decode actually emitted tokens (1.0 = no
+head-of-line blocking).
+
+Results append to ``BENCH_prefill.json`` at the repo root.  ``--smoke``
+runs the reduced sweep used by ``scripts/verify.sh`` and asserts
+  1. chunked peak-activation memory < one-shot at the 8K+ prompt,
+  2. chunked TTFT <= TTFT_FACTOR x one-shot (regression bound), and
+  3. fairness == 1.0 with all requests completing.
+
+  PYTHONPATH=src python benchmarks/prefill_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import AttnConfig, ModelConfig, SSMConfig
+from repro.models.lm import init_lm_cache, init_lm_params
+from repro.serving.engine import Request, ServingEngine, make_prefill_step
+from repro.serving.prefill import _jitted_chunk_step, chunked_prefill
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(ROOT, "BENCH_prefill.json")
+TTFT_FACTOR = 2.5   # chunked TTFT bound vs one-shot (CPU dispatch overhead)
+
+
+def bench_configs(d_model: int = 64):
+    # dense_cutoff forces the online-softmax (flash-style) attention core
+    # at every length so one-shot vs chunked compares like against like
+    attn = AttnConfig(n_heads=4, n_kv_heads=2, head_dim=d_model // 4,
+                      dense_cutoff=1024)
+    return [
+        ModelConfig(name="transformer", family="dense", n_layers=4,
+                    d_model=d_model, d_ff=2 * d_model, vocab_size=256,
+                    attn=attn, layer_pattern=("dense",),
+                    vocab_pad_multiple=16),
+        ModelConfig(name="ssm", family="ssm", n_layers=4, d_model=d_model,
+                    d_ff=0, vocab_size=256,
+                    ssm=SSMConfig(d_state=16, headdim=16, chunk=16),
+                    layer_pattern=("mamba2",), vocab_pad_multiple=16),
+        ModelConfig(name="hybrid", family="hybrid", n_layers=4,
+                    d_model=d_model, d_ff=0, vocab_size=256,
+                    ssm=SSMConfig(d_state=16, headdim=16, chunk=16),
+                    layer_pattern=("mamba2", "mamba2+shared"),
+                    shared_attn=AttnConfig(n_heads=4, n_kv_heads=4,
+                                           head_dim=d_model // 4,
+                                           dense_cutoff=1024),
+                    shared_attn_d_ff=2 * d_model, vocab_pad_multiple=16),
+    ]
+
+
+def _temp_bytes(compiled) -> int:
+    try:
+        return int(compiled.memory_analysis().temp_size_in_bytes)
+    except Exception:                                   # pragma: no cover
+        return -1
+
+
+def bench_prefill(cfg, plen: int, chunk: int, max_seq: int,
+                  iters: int) -> dict:
+    params = init_lm_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, plen), 0,
+                                cfg.vocab_size, jnp.int32)
+    template = init_lm_cache(cfg, 1, max_seq)
+
+    # AOT-compile once and reuse the executables for both the memory
+    # analysis and the timed runs (no second trace+compile)
+    oneshot = jax.jit(make_prefill_step(cfg))
+    oneshot_c = oneshot.lower(params, {"tokens": prompt}, template).compile()
+    mem_one = _temp_bytes(oneshot_c)
+
+    chunk_step = _jitted_chunk_step(cfg, None)
+    ctoks = jnp.zeros((1, chunk), jnp.int32)
+    clens = jnp.zeros((1,), jnp.int32)
+    chunk_c = chunk_step.lower(params, ctoks, clens, template).compile()
+    mem_chk = _temp_bytes(chunk_c)
+
+    def run_oneshot():
+        logits, _ = oneshot_c(params, {"tokens": prompt}, template)
+        jax.block_until_ready(logits)
+
+    def run_chunked():
+        logits, _ = chunked_prefill(cfg, params, prompt, template,
+                                    chunk_size=chunk, step=chunk_c)
+        jax.block_until_ready(logits)
+
+    run_oneshot(), run_chunked()                     # warmup
+    best_one = best_chk = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run_oneshot()
+        best_one = min(best_one, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_chunked()
+        best_chk = min(best_chk, time.perf_counter() - t0)
+    return {
+        "plen": plen, "chunk": chunk,
+        "oneshot_ttft_ms": 1e3 * best_one,
+        "chunked_ttft_ms": 1e3 * best_chk,
+        "ttft_ratio": best_chk / best_one,
+        "oneshot_temp_bytes": mem_one,
+        "chunked_temp_bytes": mem_chk,
+        "mem_ratio": (mem_chk / mem_one) if mem_one > 0 else None,
+    }
+
+
+def bench_interleave(long_len: int, chunk: int) -> dict:
+    """Mixed workload through the engine: one long prompt + short prompts;
+    decode must progress on every iteration a prefill chunk runs."""
+    cfg = bench_configs()[2]                          # hybrid
+    params = init_lm_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    long_p = rng.integers(2, cfg.vocab_size, long_len).astype(np.int32)
+    shorts = [rng.integers(2, cfg.vocab_size, 32).astype(np.int32)
+              for _ in range(3)]
+    eng = ServingEngine(cfg, params, slots=2, max_seq=long_len + 64,
+                        decode_block=4, chunk_size=chunk)
+    eng.submit(Request(rid=0, prompt=long_p, max_new=8))
+    for i, p in enumerate(shorts):
+        eng.submit(Request(rid=i + 1, prompt=p, max_new=16))
+    t0 = time.perf_counter()
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    st = eng.stats
+    fairness = (st["interleave_decode_iters"] / st["interleave_iters"]
+                if st["interleave_iters"] else 0.0)
+    return {
+        "long_len": long_len, "chunk": chunk, "wall_s": wall,
+        "completed": len(done), "submitted": 1 + len(shorts),
+        "prefill_chunks": st["prefill_chunks"],
+        "interleave_iters": st["interleave_iters"],
+        "interleave_decode_iters": st["interleave_decode_iters"],
+        "fairness": fairness,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep + memory/TTFT/fairness assertions")
+    ap.add_argument("--chunk", type=int, default=512)
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+    plens = [8192] if args.smoke else [512, 1024, 2048, 4096, 8192]
+    iters = min(args.iters, 2) if args.smoke else args.iters
+    args.iters = iters
+    chunk = args.chunk
+
+    results = {}
+    for cfg in bench_configs():
+        rows = []
+        for plen in plens:
+            row = bench_prefill(cfg, plen, chunk, plen + 64, args.iters)
+            rows.append(row)
+            mem = (f"{row['mem_ratio']:.3f}" if row["mem_ratio"] is not None
+                   else "n/a")
+            print(f"{cfg.name:12s} L={plen:6d} oneshot "
+                  f"{row['oneshot_ttft_ms']:8.1f} ms | chunked({chunk}) "
+                  f"{row['chunked_ttft_ms']:8.1f} ms "
+                  f"(x{row['ttft_ratio']:.2f}) | temp mem ratio {mem}")
+        results[cfg.name] = rows
+
+    inter = bench_interleave(long_len=8192, chunk=chunk)
+    print(f"interleave   L={inter['long_len']} fairness "
+          f"{inter['fairness']:.2f} "
+          f"({inter['interleave_decode_iters']}/"
+          f"{inter['interleave_iters']} chunk-iters with decode), "
+          f"{inter['completed']}/{inter['submitted']} done, "
+          f"{inter['wall_s']:.1f}s")
+
+    record = {"bench": "prefill", "smoke": bool(args.smoke),
+              "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
+              "chunk": chunk, "results": results, "interleave": inter}
+    runs = []
+    if os.path.exists(OUT_PATH):
+        try:
+            with open(OUT_PATH) as f:
+                runs = json.load(f).get("runs", [])
+        except (json.JSONDecodeError, OSError):
+            runs = []
+    runs.append(record)
+    with open(OUT_PATH, "w") as f:
+        json.dump({"bench": "prefill", "runs": runs}, f, indent=2)
+    print(f"appended run {len(runs)} to {OUT_PATH}")
+
+    if args.smoke:
+        failures = []
+        for name, rows in results.items():
+            row = rows[-1]                            # the 8K+ point
+            if row["oneshot_temp_bytes"] > 0 and not (
+                    row["chunked_temp_bytes"] < row["oneshot_temp_bytes"]):
+                failures.append(
+                    f"{name}: chunked temp {row['chunked_temp_bytes']} >= "
+                    f"one-shot {row['oneshot_temp_bytes']} at L={row['plen']}")
+            if row["ttft_ratio"] > TTFT_FACTOR:
+                failures.append(
+                    f"{name}: chunked TTFT x{row['ttft_ratio']:.2f} over "
+                    f"one-shot exceeds the {TTFT_FACTOR}x bound")
+        if inter["completed"] != inter["submitted"]:
+            failures.append("interleave workload did not complete")
+        if inter["fairness"] < 1.0:
+            failures.append(
+                f"head-of-line blocking: fairness {inter['fairness']:.2f} "
+                f"< 1.0 ({inter['interleave_decode_iters']}/"
+                f"{inter['interleave_iters']})")
+        if failures:
+            raise SystemExit("prefill smoke FAILED:\n  " +
+                             "\n  ".join(failures))
+        print("smoke OK: flat chunked memory, TTFT within bound, "
+              "fairness 1.0")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 gate + decode perf smoke in one command:
+# Tier-1 gate + decode/prefill perf smokes in one command:
 #   bash scripts/verify.sh
-# Runs the tier-1 pytest command, then the decode perf smoke, and fails
-# if either failed (the smoke still runs when pre-existing tests fail,
-# so the perf trajectory is always recorded).
+# Runs the tier-1 pytest command, then the decode perf smoke (fused loop
+# >= 2x the per-token loop) and the prefill smoke (chunked peak-activation
+# memory < one-shot at 8K+ prompts, TTFT regression bound, interleaving
+# fairness 1.0), and fails if any failed (the smokes still run when
+# pre-existing tests fail, so the perf trajectories are always recorded).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,5 +17,8 @@ tier1=$?
 python benchmarks/decode_bench.py --smoke
 smoke=$?
 
-echo "tier1=$tier1 decode_smoke=$smoke"
-exit $(( tier1 || smoke ))
+python benchmarks/prefill_bench.py --smoke
+prefill=$?
+
+echo "tier1=$tier1 decode_smoke=$smoke prefill_smoke=$prefill"
+exit $(( tier1 || smoke || prefill ))

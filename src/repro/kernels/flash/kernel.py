@@ -21,7 +21,7 @@ from repro.kernels.dispatch import tpu_compiler_params
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+def _flash_kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
                   bq: int, bk: int, nk: int, causal: bool,
                   window: Optional[int], scale: float, kv_len: int):
     qi = pl.program_id(2)
@@ -33,7 +33,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
         l_s[...] = jnp.zeros_like(l_s)
         acc_s[...] = jnp.zeros_like(acc_s)
 
-    q_start = qi * bq
+    # per-row query offset (chunked prefill); zeros for plain prefill
+    q_start = qi * bq + qoff_ref[0]
     k_start = ki * bk
     # block-level skip: k block entirely in the future (causal) or entirely
     # out of the attention window
@@ -75,11 +76,22 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
 
 def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            window: Optional[int] = None,
+                           q_offset=None,
                            block_q: int = 512, block_k: int = 512,
                            interpret: bool = False) -> jax.Array:
-    """q: [B, H, Sq, d]; k, v: [B, KVH, Skv, d] -> [B, H, Sq, d]."""
+    """q: [B, H, Sq, d]; k, v: [B, KVH, Skv, d] -> [B, H, Sq, d].
+
+    ``q_offset`` (None, scalar, or [B] int32) shifts the causal/window mask
+    per batch row: query i of row b sits at absolute position
+    ``q_offset[b] + i`` (chunked prefill against a KV cache that already
+    holds earlier chunks).  The offsets ride in SMEM; the block-skip
+    predicate folds them in, so fully-masked KV blocks are still skipped."""
     b, h, sq, d = q.shape
     kvh, skv = k.shape[1], k.shape[2]
+    if q_offset is None:
+        q_offset = 0
+    qoff = jnp.broadcast_to(jnp.atleast_1d(
+        jnp.asarray(q_offset, jnp.int32)), (b,))
     bq = min(block_q, sq)
     bk = min(block_k, skv)
     pad_q = (-sq) % bq
@@ -100,6 +112,8 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
         kern,
         grid=(b, h, nq, nk),
         in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, qi, ki: (bi,),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
             pl.BlockSpec((1, 1, bk, d),
                          lambda bi, hi, qi, ki: (bi, hi // gsz, ki, 0)),
@@ -118,5 +132,5 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(q, k, v)
+    )(qoff, q, k, v)
     return out[:, :, :sq] if pad_q else out

@@ -10,11 +10,17 @@ from repro.kernels.flash import ref as _ref
 
 
 def flash_attention(q, k, v, *, causal: bool = True,
-                    window: Optional[int] = None) -> jax.Array:
+                    window: Optional[int] = None,
+                    q_offset=None) -> jax.Array:
+    """``q_offset`` (None, scalar, or [B] int32): per-row query-position
+    offset for chunked prefill against an already-filled KV prefix."""
     backend = dispatch.get_backend()
     with jax.named_scope("attn_core"):
         if backend == "ref":
-            return _ref.attention_ref(q, k, v, causal=causal, window=window)
+            return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                      q_offset=0 if q_offset is None
+                                      else q_offset)
         from repro.kernels.flash.kernel import flash_attention_pallas
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset,
                                       interpret=(backend == "interpret"))

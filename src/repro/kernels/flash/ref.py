@@ -13,21 +13,24 @@ import jax.numpy as jnp
 
 def attention_ref(q, k, v, *, causal: bool = True,
                   window: Optional[int] = None,
-                  q_offset: int = 0) -> jax.Array:
+                  q_offset=0) -> jax.Array:
+    """``q_offset``: scalar or [B] per-row query-position offset (chunked
+    prefill: query i of row b sits at absolute position q_offset[b] + i)."""
     b, h, sq, d = q.shape
     kvh = k.shape[1]
     qg = q.reshape(b, kvh, h // kvh, sq, d)
     scale = 1.0 / math.sqrt(d)
     s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    qpos = jnp.arange(sq)[:, None] + q_offset
-    kpos = jnp.arange(k.shape[2])[None, :]
-    mask = jnp.ones((sq, k.shape[2]), bool)
+    off = jnp.atleast_1d(jnp.asarray(q_offset))
+    qpos = jnp.arange(sq)[None, :] + off[:, None]              # [Bb, Sq]
+    kpos = jnp.arange(k.shape[2])[None, None, :]
+    mask = jnp.ones((off.shape[0], sq, k.shape[2]), bool)
     if causal:
-        mask &= qpos >= kpos
+        mask &= qpos[:, :, None] >= kpos
     if window is not None:
-        mask &= (qpos - kpos) < window
-    s = jnp.where(mask[None, None, None], s, -1e30)
+        mask &= (qpos[:, :, None] - kpos) < window
+    s = jnp.where(mask[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
     return o.reshape(b, h, sq, d).astype(q.dtype)

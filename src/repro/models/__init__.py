@@ -1,4 +1,4 @@
 from repro.models.lm import (  # noqa: F401
     decode_tokens, init_lm_cache, init_lm_params, lm_decode_step, lm_forward,
-    lm_param_axes, lm_prefill, model_param_defs,
+    lm_param_axes, lm_prefill, lm_prefill_chunk, model_param_defs,
 )

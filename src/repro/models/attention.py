@@ -24,21 +24,31 @@ NEG_INF = -1e30
 
 
 def _full_seq_attn(q, k, v, a: AttnConfig, *, causal: bool,
-                   window: Optional[int]) -> jax.Array:
-    """Dispatch the full-sequence core. q: [B,Sq,KV,G,hd]; k,v: [B,Skv,KV,hd]."""
+                   window: Optional[int],
+                   q_offset: Optional[jax.Array] = None) -> jax.Array:
+    """Dispatch the full-sequence core. q: [B,Sq,KV,G,hd]; k,v: [B,Skv,KV,hd].
+
+    ``q_offset`` ([B] int32, or None) shifts the causal mask for chunked
+    prefill: query i of row b sits at absolute position q_offset[b] + i
+    while keys cover absolute positions [0, Skv)."""
     if kdispatch.get_backend() != "ref":
         from repro.kernels.flash.ops import flash_attention
         b, sq, nkv, g, hd = q.shape
         qh = q.reshape(b, sq, nkv * g, hd).transpose(0, 2, 1, 3)
         kh = k.transpose(0, 2, 1, 3)
         vh = v.transpose(0, 2, 1, 3)
-        o = flash_attention(qh, kh, vh, causal=causal, window=window)
+        o = flash_attention(qh, kh, vh, causal=causal, window=window,
+                            q_offset=q_offset)
         return o.transpose(0, 2, 1, 3).reshape(b, sq, nkv, g, hd)
-    if window is not None and causal and k.shape[1] > 2 * window:
+    if (q_offset is None and window is not None and causal
+            and k.shape[1] > 2 * window):
         return _local_banded_attention(q, k, v, window=window)
+    off = 0 if q_offset is None else q_offset
     if k.shape[1] <= a.dense_cutoff or a.impl == "dense":
-        return _dense_attention(q, k, v, causal=causal, window=window)
-    return _chunked_attention(q, k, v, causal=causal, window=window)
+        return _dense_attention(q, k, v, causal=causal, window=window,
+                                q_offset=off)
+    return _chunked_attention(q, k, v, causal=causal, window=window,
+                              q_offset=off)
 
 
 def attn_param_defs(d_model: int, a: AttnConfig) -> Dict[str, ParamDef]:
@@ -71,28 +81,31 @@ def _group_q(q: jax.Array, n_kv: int) -> jax.Array:
 
 
 def _dense_attention(q, k, v, *, causal: bool, window: Optional[int],
-                     q_offset: int = 0) -> jax.Array:
-    """q: [B,Sq,KV,G,hd]; k,v: [B,Skv,KV,hd]. Returns [B,Sq,KV,G,hd]."""
+                     q_offset=0) -> jax.Array:
+    """q: [B,Sq,KV,G,hd]; k,v: [B,Skv,KV,hd]. Returns [B,Sq,KV,G,hd].
+    ``q_offset``: scalar or [B] per-row query-position offset."""
     with jax.named_scope("attn_core"):
         scale = 1.0 / math.sqrt(q.shape[-1])
         scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
                             preferred_element_type=jnp.float32) * scale
         sq, skv = q.shape[1], k.shape[1]
-        qpos = jnp.arange(sq)[:, None] + q_offset
-        kpos = jnp.arange(skv)[None, :]
-        mask = jnp.ones((sq, skv), bool)
+        off = jnp.atleast_1d(jnp.asarray(q_offset))
+        qpos = jnp.arange(sq)[None, :] + off[:, None]          # [Bb, Sq]
+        kpos = jnp.arange(skv)[None, None, :]
+        mask = jnp.ones((off.shape[0], sq, skv), bool)
         if causal:
-            mask &= qpos >= kpos
+            mask &= qpos[:, :, None] >= kpos
         if window is not None:
-            mask &= (qpos - kpos) < window
-        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+            mask &= (qpos[:, :, None] - kpos) < window
+        scores = jnp.where(mask[:, None, None], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
         return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
 
 
 def _chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
-                       kv_block: int = 1024) -> jax.Array:
-    """Online-softmax over kv blocks (flash-style, numerically exact)."""
+                       kv_block: int = 1024, q_offset=0) -> jax.Array:
+    """Online-softmax over kv blocks (flash-style, numerically exact).
+    ``q_offset``: scalar or [B] per-row query-position offset."""
     b, sq, nkv, g, hd = q.shape
     skv = k.shape[1]
     nb = -(-skv // kv_block)
@@ -103,7 +116,8 @@ def _chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
     kb = k.reshape(b, nb, kv_block, nkv, hd).transpose(1, 0, 2, 3, 4)
     vb = v.reshape(b, nb, kv_block, nkv, hd).transpose(1, 0, 2, 3, 4)
     scale = 1.0 / math.sqrt(hd)
-    qpos = jnp.arange(sq)
+    off = jnp.atleast_1d(jnp.asarray(q_offset))
+    qpos = jnp.arange(sq)[None, :] + off[:, None]              # [Bb, Sq]
 
     def body(carry, blk):
         m, l, acc = carry
@@ -112,12 +126,13 @@ def _chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
             s = jnp.einsum("bqkgd,bskd->bkgqs", q, kblk,
                            preferred_element_type=jnp.float32) * scale
             kpos = bidx * kv_block + jnp.arange(kv_block)
-            mask = kpos[None, :] < skv
+            mask = jnp.broadcast_to(kpos[None, None, :] < skv,
+                                    (off.shape[0], sq, kv_block))
             if causal:
-                mask &= qpos[:, None] >= kpos[None, :]
+                mask &= qpos[:, :, None] >= kpos[None, None, :]
             if window is not None:
-                mask &= (qpos[:, None] - kpos[None, :]) < window
-            s = jnp.where(mask[None, None, None], s, NEG_INF)
+                mask &= (qpos[:, :, None] - kpos[None, None, :]) < window
+            s = jnp.where(mask[:, None, None], s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -222,6 +237,15 @@ def attention(p: Dict, x: jax.Array, a: AttnConfig, *,
             cos = jnp.take(cos, posv, axis=0, mode="clip")[:, None]
             q = apply_rope(q, sin, cos)
             k = apply_rope(k, sin, cos)
+        elif cache is not None and pos is not None:
+            # chunked prefill: row b's chunk covers absolute positions
+            # pos[b] .. pos[b]+s (clip keeps overrun/inert rows finite)
+            posv = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
+            idx = posv[:, None] + jnp.arange(s)                # [B, s]
+            sin = jnp.take(sin, idx, axis=0, mode="clip")      # [B, s, half]
+            cos = jnp.take(cos, idx, axis=0, mode="clip")
+            q = apply_rope(q, sin, cos)
+            k = apply_rope(k, sin, cos)
         else:
             q = apply_rope(q, sin[:s], cos[:s])
             k = apply_rope(k, sin[:s], cos[:s])
@@ -235,6 +259,34 @@ def attention(p: Dict, x: jax.Array, a: AttnConfig, *,
     new_cache = None
     if cache is None:
         o = _full_seq_attn(q, kr, vr, a, causal=a.causal, window=window)
+    elif s > 1 and pos is not None:
+        # chunked prefill: scatter this chunk's kv at each row's running
+        # offset, then attend over the whole cache with the offset causal
+        # mask.  Out-of-range positions are dropped; positions past a row's
+        # valid length hold garbage that the next chunk overwrites or the
+        # decode-time valid_len mask hides.
+        skv = cache["k"].shape[1]
+        if window is not None and skv <= window:
+            raise NotImplementedError(
+                "chunked prefill needs a full-length KV cache; rolling "
+                "sliding-window caches only support one-shot prefill")
+        posv = jnp.broadcast_to(jnp.atleast_1d(pos), (b,)).astype(jnp.int32)
+        idx = posv[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+
+        def _scatter_rows(full, upd, ii):
+            return full.at[ii].set(upd.astype(full.dtype), mode="drop")
+
+        kc = constrain(jax.vmap(_scatter_rows)(cache["k"], k, idx),
+                       ("batch", "kv_seq", "kv_heads", None))
+        vc = constrain(jax.vmap(_scatter_rows)(cache["v"], v, idx),
+                       ("batch", "kv_seq", "kv_heads", None))
+        new_cache = {"k": kc, "v": vc}
+        kcr = constrain(_repeat_kv(kc.astype(x.dtype), kv_repeat),
+                        ("batch", "kv_seq", "kv_heads", None))
+        vcr = constrain(_repeat_kv(vc.astype(x.dtype), kv_repeat),
+                        ("batch", "kv_seq", "kv_heads", None))
+        o = _full_seq_attn(q, kcr, vcr, a, causal=a.causal, window=window,
+                           q_offset=posv)
     elif s > 1:
         # prefill into cache
         o = _full_seq_attn(q, kr, vr, a, causal=a.causal, window=window)

@@ -106,7 +106,12 @@ def apply_layer(cfg: ModelConfig, kind: str, p: Dict, x: jax.Array, *,
                 rope, rope_local=None, cache: Optional[Dict] = None,
                 pos: Optional[jax.Array] = None, kv_repeat: int = 1,
                 shared: Optional[Dict] = None, shared_kv_repeat: int = 1,
-                moe_groups: int = 1) -> Tuple[jax.Array, Optional[Dict]]:
+                moe_groups: int = 1,
+                chunk_mask: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """``chunk_mask`` ([B, S] bool) marks valid tokens during a chunked
+    prefill (cache + S>1 + pos): attention offsets its causal mask / KV
+    writes by ``pos``, SSM layers treat invalid tokens as inert."""
     eps = cfg.norm_eps
     x = _residual(x)
     if kind in ATTN_KINDS:
@@ -144,7 +149,8 @@ def apply_layer(cfg: ModelConfig, kind: str, p: Dict, x: jax.Array, *,
                                             cfg.d_model, cache=mcache, eps=eps)
         else:
             m_out, new_m = m2.mamba2_block(p["mamba"], h, cfg.ssm,
-                                           cfg.d_model, cache=mcache, eps=eps)
+                                           cfg.d_model, cache=mcache, eps=eps,
+                                           mask=chunk_mask)
         x = x + a_out + m_out
         h = rms_norm(x, p["ln2"], eps)
         x = x + mlp(p["mlp"], h, cfg.act)
@@ -166,7 +172,8 @@ def apply_layer(cfg: ModelConfig, kind: str, p: Dict, x: jax.Array, *,
                                           cache=mcache, eps=eps)
         else:
             out, new_m = m2.mamba2_block(p["mamba"], h, cfg.ssm, cfg.d_model,
-                                         cache=mcache, eps=eps)
+                                         cache=mcache, eps=eps,
+                                         mask=chunk_mask)
         x = x + out
         new_cache = new_m
         if kind == "mamba2+shared":
@@ -192,7 +199,8 @@ def apply_layer(cfg: ModelConfig, kind: str, p: Dict, x: jax.Array, *,
                                           cache=cache, eps=eps)
         else:
             out, new_m = m1.mamba1_block(p["mamba"], h, cfg.ssm, cfg.d_model,
-                                         cache=cache, eps=eps)
+                                         cache=cache, eps=eps,
+                                         mask=chunk_mask)
         return _residual(x + out), new_m
 
     raise ValueError(kind)

@@ -13,6 +13,12 @@ The cache built by :func:`init_lm_cache` carries a per-row position vector
 serving engine admits requests at different times).  Three entry points:
 
 * :func:`lm_prefill` — process the prompt, fill the cache.
+* :func:`lm_prefill_chunk` — one chunk of a state-carrying chunked prefill:
+  attention KV lands at the per-row running offset ``cache["pos"]`` (offset
+  causal mask), SSM layers continue from their carried conv/SSM states, and
+  a per-row ``lengths`` vector makes ragged/heterogeneous chunks inert past
+  each row's valid prefix.  The serving layer (``repro.serving.prefill``)
+  drives it to prefill arbitrarily long prompts at flat memory.
 * :func:`lm_decode_step` — one token for all rows (``token: [B, 1]``).
 * :func:`decode_tokens` — the fused multi-token loop: runs ``n`` greedy (or
   temperature-sampled) steps inside a single ``jax.lax.scan`` with on-device
@@ -141,7 +147,8 @@ def _rope_for(cfg: ModelConfig, max_seq: int):
 
 def _run_segments(cfg: ModelConfig, params, x: jax.Array, *, cache=None,
                   pos=None, kv_repeat=1, shared_kv_repeat=1, moe_groups=1,
-                  rope=None, rope_local=None, train: bool = False):
+                  rope=None, rope_local=None, train: bool = False,
+                  chunk_mask=None):
     shared = params.get("shared")
     new_cache_segs = []
     for si, (unit, n_rep) in enumerate(cfg.segments()):
@@ -157,7 +164,8 @@ def _run_segments(cfg: ModelConfig, params, x: jax.Array, *, cache=None,
                     cfg, kind, layer_p[li], x, rope=rope,
                     rope_local=rope_local, cache=c, pos=pos,
                     kv_repeat=kv_repeat, shared=shared,
-                    shared_kv_repeat=shared_kv_repeat, moe_groups=moe_groups)
+                    shared_kv_repeat=shared_kv_repeat, moe_groups=moe_groups,
+                    chunk_mask=chunk_mask)
                 new_cs.append(nc if nc is not None else
                               (dict() if c is None else c))
             return x, tuple(new_cs)
@@ -215,6 +223,47 @@ def lm_prefill(cfg: ModelConfig, params, inputs: Dict[str, jax.Array], cache,
     logits = _head(cfg, params, x[:, -1:])
     return logits, {"segments": new_segs,
                     "pos": jnp.full((x.shape[0],), seq, jnp.int32)}
+
+
+def lm_prefill_chunk(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
+                     cache, *, lengths: Optional[jax.Array] = None,
+                     kv_repeat: int = 1, shared_kv_repeat: int = 1,
+                     moe_groups: int = 1) -> Tuple[jax.Array, Any]:
+    """One state-carrying prefill chunk: process ``S`` prompt tokens
+    starting at each row's running offset ``cache["pos"]``.
+
+    Attention layers scatter the chunk's KV at that offset and attend with
+    the offset causal mask over the whole cache; SSM layers continue from
+    their carried conv/SSM states.  ``lengths`` ([B] int32, default all-S)
+    marks how many leading tokens of the chunk are valid per row — ragged
+    last chunks and already-finished rows (length 0) are inert: they update
+    no SSM state, and their stale KV is either overwritten by later writes
+    or hidden by the decode-time ``valid_len`` mask.  Running the chunks of
+    a prompt in order therefore reproduces :func:`lm_prefill` exactly (up
+    to fp tolerance) with peak activation memory O(chunk), not O(prompt).
+
+    Returns ``(logits of each row's last valid chunk token [B,1,V],
+    updated cache)`` with ``pos`` advanced by ``lengths``."""
+    x = _embed(cfg, params, inputs)
+    b, s = x.shape[0], x.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), (b,))
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    else:
+        lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+    chunk_mask = jnp.arange(s)[None, :] < lengths[:, None]
+    max_seq = _cache_max_seq(cfg, cache) or s
+    rope, rope_local = _rope_for(cfg, max(s, max_seq))
+    x, new_segs = _run_segments(cfg, params, x, cache=cache, pos=pos,
+                                kv_repeat=kv_repeat,
+                                shared_kv_repeat=shared_kv_repeat,
+                                moe_groups=moe_groups, rope=rope,
+                                rope_local=rope_local, train=False,
+                                chunk_mask=chunk_mask)
+    last = jnp.clip(lengths - 1, 0, s - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    logits = _head(cfg, params, x_last)
+    return logits, {"segments": new_segs, "pos": pos + lengths}
 
 
 def lm_decode_step(cfg: ModelConfig, params, token: jax.Array, cache, *,

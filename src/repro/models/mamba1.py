@@ -14,6 +14,7 @@ from repro.core.config import SSMConfig
 from repro.distributed.sharding import constrain
 from repro.kernels.conv1d.ops import causal_conv1d
 from repro.kernels.decode_fused.ops import mamba1_decode_fused
+from repro.models.mamba2 import masked_conv_state
 from repro.models.params import ParamDef
 
 
@@ -80,8 +81,12 @@ def selective_scan(xs, dt, A, Bm, Cm, D, initial_state=None, chunk: int = 512):
 
 
 def mamba1_block(p: Dict, x: jax.Array, s: SSMConfig, d_model: int, *,
-                 cache: Optional[Dict] = None, eps: float = 1e-5
+                 cache: Optional[Dict] = None, eps: float = 1e-5,
+                 mask: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Optional[Dict]]:
+    """``mask`` ([B, S] bool, chunked prefill): invalid tokens are inert —
+    dt is driven to zero so the scan state passes through unchanged, and
+    the conv state is rebuilt from the trailing valid inputs."""
     di = s.d_inner(d_model)
     dtr = dt_rank(d_model, s)
     dt_ = x.dtype
@@ -89,16 +94,23 @@ def mamba1_block(p: Dict, x: jax.Array, s: SSMConfig, d_model: int, *,
         xi = jnp.einsum("bsd,de->bse", x, p["wx"].astype(dt_))
         z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(dt_))
     xi = constrain(xi, ("batch", "seq", "conv_dim"))
+    xi_in = xi
     init_conv = cache["conv"] if cache is not None else None
     xi, conv_state = causal_conv1d(xi, p["conv_w"], p["conv_b"],
                                    initial_state=init_conv)
+    if cache is not None and mask is not None:
+        conv_state = masked_conv_state(init_conv, xi_in, mask, s.conv_kernel)
     with jax.named_scope("ssm_in_proj"):
         proj = jnp.einsum("bse,ef->bsf", xi, p["x_proj"].astype(dt_))
         dt_low, bm, cm = (proj[..., :dtr], proj[..., dtr:dtr + s.d_state],
                           proj[..., dtr + s.d_state:])
-        dt = jax.nn.softplus(
-            jnp.einsum("bsr,re->bse", dt_low, p["dt_proj"].astype(dt_)
-                       ).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+        dt_pre = (jnp.einsum("bsr,re->bse", dt_low, p["dt_proj"].astype(dt_)
+                             ).astype(jnp.float32)
+                  + p["dt_bias"].astype(jnp.float32))
+        if mask is not None:
+            # -30 ⇒ softplus -> 0 ⇒ invalid tokens update no scan state
+            dt_pre = jnp.where(mask[:, :, None], dt_pre, -30.0)
+        dt = jax.nn.softplus(dt_pre)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
     init_ssm = cache["ssm"] if cache is not None else None
     from repro.kernels import dispatch as _dispatch

@@ -36,6 +36,24 @@ def mamba2_param_defs(d_model: int, s: SSMConfig) -> Dict[str, ParamDef]:
     }
 
 
+def masked_conv_state(init_state: Optional[jax.Array], x_in: jax.Array,
+                      mask: jax.Array, k: int) -> jax.Array:
+    """Conv state after a ragged chunk: the trailing ``k-1`` *valid* inputs
+    per row.  Valid tokens are a left-aligned prefix of the chunk (length
+    ``mask.sum(1)``), so the window ends at that length, not at the padded
+    chunk end.  x_in: [B, S, C] pre-conv inputs; mask: [B, S] bool."""
+    b, _, c = x_in.shape
+    if k <= 1:
+        return jnp.zeros((b, 0, c), x_in.dtype)
+    if init_state is None:
+        init_state = jnp.zeros((b, k - 1, c), x_in.dtype)
+    src = jnp.concatenate([init_state.astype(x_in.dtype), x_in], axis=1)
+    lens = jnp.sum(mask, axis=1).astype(jnp.int32)
+    return jax.vmap(
+        lambda row, l: jax.lax.dynamic_slice_in_dim(row, l, k - 1, axis=0)
+    )(src, lens)
+
+
 def _split_xbc(xbc: jax.Array, s: SSMConfig, d_model: int):
     di = s.d_inner(d_model)
     gn = s.n_groups * s.d_state
@@ -48,9 +66,16 @@ def _split_xbc(xbc: jax.Array, s: SSMConfig, d_model: int):
 
 
 def mamba2_block(p: Dict, x: jax.Array, s: SSMConfig, d_model: int, *,
-                 cache: Optional[Dict] = None, eps: float = 1e-5
+                 cache: Optional[Dict] = None, eps: float = 1e-5,
+                 mask: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Optional[Dict]]:
-    """Full-sequence pass. If cache is given (prefill), returns final states."""
+    """Full-sequence pass. If cache is given (prefill), returns final states.
+
+    ``mask`` ([B, S] bool, chunked prefill): rows whose valid tokens are a
+    left-aligned prefix.  Invalid tokens are inert — their dt is driven to
+    zero (state passes through unchanged) and the conv state is rebuilt
+    from the trailing *valid* inputs, so the returned states equal those of
+    a prefill over only the valid prefix."""
     b, seq, _ = x.shape
     di = s.d_inner(d_model)
     nh = s.n_ssm_heads(d_model)
@@ -60,9 +85,15 @@ def mamba2_block(p: Dict, x: jax.Array, s: SSMConfig, d_model: int, *,
         xbc = jnp.einsum("bsd,de->bse", x, p["wxBC"].astype(dt_))
         dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(dt_))
     xbc = constrain(xbc, ("batch", "seq", "conv_dim"))
+    if mask is not None:
+        # -30 ⇒ softplus -> 0 ⇒ invalid tokens update no SSM state
+        dt_raw = jnp.where(mask[:, :, None], dt_raw, -30.0)
+    xbc_in = xbc
     init_conv = cache["conv"] if cache is not None else None
     xbc, conv_state = causal_conv1d(xbc, p["conv_w"], p["conv_b"],
                                     initial_state=init_conv)
+    if cache is not None and mask is not None:
+        conv_state = masked_conv_state(init_conv, xbc_in, mask, s.conv_kernel)
     xs, bm, cm = _split_xbc(xbc, s, d_model)
     xh = constrain(xs.reshape(b, seq, nh, s.headdim),
                    ("batch", "seq", "ssm_heads", None))

@@ -1,5 +1,5 @@
 """Serving runtime: prefill / decode step builders + a slot-based batch
-engine (continuous-batching-lite).
+engine (continuous batching with interleaved chunked prefill).
 
 ``serve_step`` (the decode shape lowered by the dry-run) is one new token
 against a KV/state cache of the workload's seq_len, exactly per the
@@ -13,6 +13,15 @@ inside one compiled ``lax.scan`` — on-device argmax, a single
 device->host transfer per block instead of one per token.  The cache
 carries a per-slot ``pos`` vector, so slots admitted at different times
 decode at their own offsets (no shared position counter).
+
+Admission runs through the chunked-prefill subsystem
+(:mod:`repro.serving.prefill`): queued prompts of heterogeneous lengths
+form one padded group, and every engine iteration runs exactly ONE prefill
+chunk interleaved with the decode burst — a 57K-token prompt can no longer
+stall the decoding slots behind a monolithic O(L) prefill.  When the queue
+is starved of slots, the engine preempts the live slot with the most
+remaining decode work (host offload via :mod:`repro.serving.cache`) and
+restores it once a slot frees up.
 """
 from __future__ import annotations
 
@@ -27,6 +36,8 @@ from repro.core.config import ModelConfig
 from repro.distributed.sharding import ShardingPlan
 from repro.models.lm import (decode_tokens, init_lm_cache, lm_decode_step,
                              lm_forward, lm_prefill)
+from repro.serving.cache import offload_slot, restore_slot
+from repro.serving.prefill import ChunkedPrefill, supports_chunked_prefill
 
 
 def make_prefill_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
@@ -104,22 +115,30 @@ class Request:
     max_new: int
     out: List[int] = field(default_factory=list)
     done: bool = False
+    # preemption state (set when the engine offloads this request's slot)
+    blob: Optional[Dict[str, np.ndarray]] = None
+    next_token: int = 0
+    resume_pos: int = 0
+    preemptions: int = 0
 
 
 def _scatter_group(batch_cache, src_cache, dst: jax.Array):
-    """Insert every row of a batch-k prefill cache into slots ``dst`` ([k])
-    of the batch cache in one call (per leaf the batch dim is axis 1:
-    caches are stacked [n_rep, B, ...]).  Jitted by the engine so a whole
-    admission group lands in a single dispatch instead of one full-cache
-    copy per request."""
+    """Insert rows of a batch-k prefill cache into slots ``dst`` ([k]) of
+    the batch cache in one call (per leaf the batch dim is axis 1: caches
+    are stacked [n_rep, B, ...]).  Rows with ``dst[i] < 0`` are skipped
+    (inert padding rows / rows emitted on an earlier chunk).  Jitted by
+    the engine so a whole admission group lands in a single dispatch
+    instead of one full-cache copy per request."""
     def ins(full, one):
         if full.ndim == 0 or one is None:
             return full
 
         def body(i, acc):
+            d = jnp.clip(dst[i], 0, acc.shape[1] - 1)
             sl = jax.lax.dynamic_slice_in_dim(one, i, 1, axis=1)
-            return jax.lax.dynamic_update_slice_in_dim(
-                acc, sl.astype(acc.dtype), dst[i], axis=1)
+            cur = jax.lax.dynamic_slice_in_dim(acc, d, 1, axis=1)
+            sl = jnp.where(dst[i] >= 0, sl.astype(acc.dtype), cur)
+            return jax.lax.dynamic_update_slice_in_dim(acc, sl, d, axis=1)
 
         return jax.lax.fori_loop(0, one.shape[1], body, full)
     segs = [jax.tree_util.tree_map(ins, fs, ss)
@@ -130,15 +149,24 @@ def _scatter_group(batch_cache, src_cache, dst: jax.Array):
 class ServingEngine:
     """Fixed-slot continuous batching over the fused decode loop.
 
-    Each :meth:`step` admits queued prompts into free slots (batched
-    same-length prefills into preallocated cache templates — no per-admission
-    allocation), then decodes ``decode_block`` tokens for every slot in one
-    compiled loop.  Per-slot ``pos`` means late-admitted slots attend only
-    over their own valid cache rows.
+    Each :meth:`step` runs one admission move — one chunk of the in-flight
+    mixed-length prefill group, a preempted-slot restore, or (when chunked
+    prefill is unsupported) a one-shot batched prefill — then decodes
+    ``decode_block`` tokens for every slot in one compiled loop.  Prefill
+    and decode interleave: a long prompt prefilling chunk-by-chunk never
+    blocks decode progress on live slots.  Per-slot ``pos`` means
+    late-admitted slots attend only over their own valid cache rows.
+
+    When queued prompts are starved (no slot has freed for
+    ``preempt_after`` iterations and no prefill is in flight), the live
+    slot with the most remaining decode work is offloaded to host memory
+    and requeued; it is restored — states, next token, position — once a
+    slot frees, and resumes exactly where it stopped.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int, max_seq: int,
-                 plan: Optional[ShardingPlan] = None, decode_block: int = 8):
+                 plan: Optional[ShardingPlan] = None, decode_block: int = 8,
+                 chunk_size: Optional[int] = None, preempt_after: int = 4):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -151,6 +179,17 @@ class ServingEngine:
                                  static_argnames=("n",))
         self._scatter = jax.jit(_scatter_group)
         self.kv_repeat = kv_repeat
+        self.chunk_size = chunk_size or min(256, max_seq)
+        self.preempt_after = preempt_after
+        self.chunked = supports_chunked_prefill(cfg)
+        self._chunked_prefill = (
+            ChunkedPrefill(cfg, params, max_seq=max_seq,
+                           chunk_size=self.chunk_size, plan=plan)
+            if self.chunked else None)
+        # slots reserved for the in-flight prefill group: row i of the
+        # group lands in slot _pending[i][0] when its prompt completes
+        self._pending: List[Tuple[int, Request]] = []
+        self._starved = 0
         # preallocated prefill cache templates keyed by admission batch size
         # (prefill is functional, so one template serves every admission)
         self._templates: Dict[int, Any] = {}
@@ -159,8 +198,21 @@ class ServingEngine:
         self.pos = np.zeros((slots,), np.int64)
         self.queue: List[Request] = []
         self.finished: List[Request] = []
+        self.stats = {"iters": 0, "decode_tokens": 0, "prefill_chunks": 0,
+                      "preemptions": 0, "restores": 0,
+                      "interleave_iters": 0, "interleave_decode_iters": 0}
 
     def submit(self, req: Request) -> None:
+        # validate here, before admission can pop the request and reserve
+        # slots: a mid-group failure would strand co-batched requests
+        if len(req.prompt) == 0:
+            raise ValueError(f"rid={req.rid}: empty prompt")
+        # decode room is max_seq - 1 - pos, so a prompt needs at least two
+        # cache rows beyond itself to emit any decoded token
+        if len(req.prompt) > self.max_seq - 2:
+            raise ValueError(
+                f"rid={req.rid}: prompt length {len(req.prompt)} exceeds "
+                f"max_seq-2 ({self.max_seq - 2}); no room to decode")
         self.queue.append(req)
 
     def _template(self, batch: int):
@@ -172,11 +224,106 @@ class ServingEngine:
                 self.cfg, batch, self.max_seq, kv_repeat=self.kv_repeat)
         return self._templates[batch]
 
+    # ----------------------------------------------------------- admission
+    def _restore(self, b: int, req: Request) -> None:
+        """Re-admit a preempted request from its host-offloaded state."""
+        self.cache = restore_slot(self.cache, req.blob, b)
+        self.tokens[b, 0] = req.next_token
+        self.pos[b] = req.resume_pos
+        self.live[b] = req
+        req.blob = None
+        self.stats["restores"] += 1
+
     def _admit(self) -> None:
+        if not self.chunked:
+            self._admit_grouped()
+            return
+        reserved = {b for b, _ in self._pending}
+        free = [b for b in range(self.slots)
+                if self.live[b] is None and b not in reserved]
+        ch = self._chunked_prefill
+        # fill free slots from the queue in order: preempted requests are
+        # restored in place (their cache is already prefilled+decoded),
+        # fresh prompts accumulate into one mixed-length prefill group
+        fresh: List[Request] = []
+        while free and self.queue:
+            req = self.queue[0]
+            if req.blob is not None:
+                self.queue.pop(0)
+                self._restore(free.pop(0), req)
+            elif not ch.active:
+                self.queue.pop(0)
+                fresh.append(req)
+                self._pending.append((free.pop(0), req))
+            else:  # a group is already in flight; keep the slot reserved
+                break
+        if fresh:
+            ch.start([r.prompt for r in fresh],
+                     batch=self.slots if len(fresh) > 1 else 1)
+        if ch.active:
+            emitted, done = ch.step()
+            self._chunk_ran = True
+            self.stats["prefill_chunks"] += 1
+            if emitted:
+                dst = np.full((len(self._pending),), -1, np.int32)
+                for row, tok, plen in emitted:
+                    b, req = self._pending[row]
+                    dst[row] = b
+                    req.out.append(tok)
+                    self.tokens[b, 0] = tok
+                    self.pos[b] = plen
+                    self.live[b] = req
+                # batch rows past the real group are inert (dst stays -1)
+                full = np.full((ch.group_cache["pos"].shape[0],), -1,
+                               np.int32)
+                full[:len(dst)] = dst
+                self.cache = self._scatter(self.cache, ch.group_cache,
+                                           jnp.asarray(full))
+            if done:
+                ch.finish()
+                self._pending = []
+            self._starved = 0
+        elif self.queue and not free:
+            # queue starved: no slot freed and nothing is prefilling
+            self._starved += 1
+            if self._starved >= self.preempt_after:
+                self._preempt()
+        else:
+            self._starved = 0
+
+    def _preempt(self) -> None:
+        """Offload the live slot with the most remaining decode work so a
+        starved queued prompt can take its slot next iteration."""
+        live = [(req.max_new - len(req.out), b)
+                for b, req in enumerate(self.live) if req is not None]
+        if not live:
+            return
+        _, b = max(live)
+        req = self.live[b]
+        self.cache = dict(self.cache, pos=jnp.asarray(self.pos, jnp.int32))
+        req.blob = offload_slot(self.cache, b)
+        req.next_token = int(self.tokens[b, 0])
+        req.resume_pos = int(self.pos[b])
+        req.preemptions += 1
+        self.live[b] = None
+        self.queue.append(req)
+        self._starved = 0
+        self.stats["preemptions"] += 1
+
+    def _admit_grouped(self) -> None:
+        """Fallback admission for architectures without chunked-prefill
+        support (rolling-window caches, encoders): batched same-length
+        one-shot prefills into preallocated templates."""
         free = [b for b in range(self.slots) if self.live[b] is None]
         batch: List[Tuple[int, Request]] = []
         while free and self.queue:
-            batch.append((free.pop(0), self.queue.pop(0)))
+            req = self.queue[0]
+            if req.blob is not None:
+                self.queue.pop(0)
+                self._restore(free.pop(0), req)
+                continue
+            self.queue.pop(0)
+            batch.append((free.pop(0), req))
         if not batch:
             return
         # one batched prefill per prompt length (stale rows beyond the
@@ -206,18 +353,24 @@ class ServingEngine:
                 self.pos[b] = len(req.prompt)
                 self.live[b] = req
 
+    # ------------------------------------------------------------- decode
     def step(self) -> int:
-        """One engine iteration: admit, then decode a ``decode_block``-token
-        burst for all slots on device. Returns number of live + queued."""
+        """One engine iteration: one admission move (prefill chunk /
+        restore / fallback prefill) interleaved with a ``decode_block``
+        burst for all live slots.  Returns live + queued + in-prefill."""
+        self.stats["iters"] += 1
+        self._chunk_ran = False
         self._admit()
+        chunk_ran = self._chunk_ran
         if not any(req is not None for req in self.live):
-            return 0
+            return len(self.queue) + len(self._pending)
         kblk = self.decode_block
         self.cache = dict(self.cache, pos=jnp.asarray(self.pos, jnp.int32))
         toks, self.cache = self._decode_n(self.params, self.cache,
                                           jnp.asarray(self.tokens), n=kblk)
         toks = np.asarray(toks)                     # one host sync per block
         n_live = 0
+        decoded = 0
         for b, req in enumerate(self.live):
             if req is None:
                 continue
@@ -225,6 +378,7 @@ class ServingEngine:
                        self.max_seq - 1 - int(self.pos[b]))
             take = min(kblk, max(room, 0))
             req.out.extend(int(t) for t in toks[b, :take])
+            decoded += take
             if take:
                 self.tokens[b, 0] = int(toks[b, take - 1])
             self.pos[b] += take
@@ -234,9 +388,16 @@ class ServingEngine:
                 self.live[b] = None
             else:
                 n_live += 1
-        return n_live + len(self.queue)
+        self.stats["decode_tokens"] += decoded
+        if chunk_ran:
+            # interleaving fairness: iterations where a prefill chunk ran
+            # alongside live decode slots, and whether decode progressed
+            self.stats["interleave_iters"] += 1
+            if decoded:
+                self.stats["interleave_decode_iters"] += 1
+        return n_live + len(self.queue) + len(self._pending)
 
     def run(self) -> List[Request]:
-        while self.step() or self.queue:
+        while self.step() or self.queue or self._pending:
             pass
         return self.finished

@@ -1,0 +1,228 @@
+"""Chunked-prefill subsystem: state-carrying long-context prefill.
+
+The paper's long-context regime (TTFT inversion around ~57K tokens) makes
+monolithic prefill the serving bottleneck: one O(L) forward spikes
+activation memory at exactly the sequence lengths under study and stalls
+every decoding slot behind it (head-of-line blocking).  This module
+splits prompts into fixed-size chunks and drives them through the single
+compiled :func:`repro.models.lm.lm_prefill_chunk` step, which carries
+state between chunks — attention layers scatter KV at each row's running
+offset with an offset causal mask, mamba1/mamba2 layers carry their
+conv + SSM states — so a 57K-token prompt prefills in 1K-token chunks
+with flat peak memory and chunk-parity with one-shot prefill.
+
+Chunk/decode interleave contract (what ``ServingEngine`` relies on):
+
+* ``ChunkedPrefill`` owns an in-flight *group*: a padded mixed-length
+  batch of prompts plus a group cache.  One :meth:`ChunkedPrefill.step`
+  call advances the whole group by exactly ONE chunk and returns
+  immediately, so the engine can interleave one prefill chunk with one
+  ``decode_block`` burst per iteration — decode makes progress on every
+  engine iteration even while a long prompt is prefilling.
+* Rows are *emitted* (first token + filled cache rows, ready to scatter
+  into decode slots) as soon as their own prompt completes, not when the
+  whole group does: short prompts sharing a group with a long one start
+  decoding after their last chunk, chunks earlier than the long row's.
+* Heterogeneous prompt lengths need no same-length grouping: prompts are
+  right-padded onto the chunk grid and a per-row ``lengths`` vector makes
+  padding inert (no SSM-state updates; stale KV is overwritten or masked
+  by the decode-time valid_len).  Rows past the real group (batch padded
+  to a template size) are zero-length and therefore complete no-ops.
+* The group cache template is allocated once per retained batch size and
+  reused for every subsequent group (prefill is functional — the template
+  itself is never mutated).
+
+Compiled-shape discipline: every chunk step lowers to the same
+``[batch, chunk]`` program regardless of prompt length, so XLA compiles
+at most one prefill program per retained batch size and peak activation
+memory is O(chunk), not O(prompt).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.distributed.sharding import ShardingPlan
+from repro.models.lm import init_lm_cache, lm_prefill_chunk
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill needs causal attention over a full-length KV cache.
+
+    Excluded: encoder layers (bidirectional — every token sees the whole
+    sequence, so there is no prefix-extension recurrence), sliding-window
+    "local" layers (their rolling caches only hold the trailing window),
+    and feature frontends (vision/audio prefixes change the token grid).
+    """
+    if cfg.frontend != "none":
+        return False
+    return not any(kind in ("encoder", "local") for kind in cfg.layer_kinds)
+
+
+def _make_chunk_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
+    kv_repeat = plan.kv_repeat if plan else 1
+    moe_groups = plan.moe_groups if plan else 1
+
+    def chunk_step(params, tokens, lengths, cache):
+        return lm_prefill_chunk(cfg, params, {"tokens": tokens}, cache,
+                                lengths=lengths, kv_repeat=kv_repeat,
+                                moe_groups=moe_groups)
+
+    return chunk_step
+
+
+# jitted chunk steps keyed by everything the closure actually depends on
+# (cfg plus the plan's kv_repeat/moe_groups): repeated chunked_prefill
+# calls must reuse the compiled program, not re-trace
+_STEP_CACHE: Dict[Tuple[ModelConfig, int, int], Any] = {}
+
+
+def _jitted_chunk_step(cfg: ModelConfig, plan: Optional[ShardingPlan]):
+    key = (cfg, plan.kv_repeat if plan else 1, plan.moe_groups if plan else 1)
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = jax.jit(_make_chunk_step(cfg, plan))
+    return _STEP_CACHE[key]
+
+
+def chunk_schedule(lens: np.ndarray, chunk: int,
+                   idx: int) -> Tuple[int, np.ndarray, np.ndarray]:
+    """Per-chunk admission arithmetic, shared by the group scheduler and
+    the host-loop helper so ragged-last-chunk / finish detection can never
+    diverge between them.  Returns ``(offset, valid_lens, finished)`` for
+    chunk ``idx``: how many of the chunk's tokens are valid per row, and
+    which rows' prompts end inside this chunk."""
+    off = idx * chunk
+    clens = np.clip(lens - off, 0, chunk).astype(np.int32)
+    fin = (lens > off) & (lens <= off + chunk)
+    return off, clens, fin
+
+
+def chunked_prefill(cfg: ModelConfig, params, tokens: jax.Array, cache, *,
+                    chunk_size: int, lengths: Optional[Sequence[int]] = None,
+                    plan: Optional[ShardingPlan] = None,
+                    step=None) -> Tuple[jax.Array, Any]:
+    """Prefill ``tokens`` [B, S] (right-padded, per-row valid ``lengths``)
+    in ``chunk_size`` chunks.  Drop-in replacement for
+    :func:`repro.models.lm.lm_prefill` — returns (last-valid-token logits
+    [B, 1, V], filled cache) — but runs the fixed-shape chunk program
+    ceil(S/chunk) times instead of one O(S) program.
+
+    ``step`` overrides the compiled chunk callable (e.g. an AOT-compiled
+    executable, so benchmarks don't pay a second trace+compile).
+    """
+    tokens = jnp.asarray(tokens)
+    b, total = tokens.shape
+    lens = (np.full((b,), total, np.int64) if lengths is None
+            else np.asarray(lengths, np.int64))
+    if step is None:
+        step = _jitted_chunk_step(cfg, plan)
+    n_chunks = max(1, -(-total // chunk_size))
+    pad = n_chunks * chunk_size - total
+    if pad:
+        tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+    logits = None
+    for i in range(n_chunks):
+        off, clens, fin = chunk_schedule(lens, chunk_size, i)
+        lg, cache = step(params, tokens[:, off:off + chunk_size],
+                         jnp.asarray(clens), cache)
+        if logits is None:
+            logits = lg
+        elif fin.any():
+            logits = jnp.where(jnp.asarray(fin)[:, None, None], lg, logits)
+    return logits, cache
+
+
+class ChunkedPrefill:
+    """Incremental chunked-prefill scheduler for the serving engine.
+
+    One group at a time; :meth:`step` advances it by one chunk and reports
+    rows whose prompt just completed (see module docstring for the full
+    interleave contract)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_seq: int,
+                 chunk_size: int = 256,
+                 plan: Optional[ShardingPlan] = None):
+        if not supports_chunked_prefill(cfg):
+            raise ValueError(f"{cfg.name}: architecture does not support "
+                             "chunked prefill")
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.chunk = int(chunk_size)
+        self.kv_repeat = plan.kv_repeat if plan else 1
+        self._step = _jitted_chunk_step(cfg, plan)
+        self._templates: Dict[int, Any] = {}
+        self._group: Optional[Dict[str, Any]] = None
+
+    @property
+    def active(self) -> bool:
+        return self._group is not None
+
+    @property
+    def group_cache(self):
+        """The in-flight group's cache (scatter emitted rows from here)."""
+        assert self._group is not None
+        return self._group["cache"]
+
+    def _template(self, batch: int):
+        if batch not in self._templates:
+            self._templates[batch] = init_lm_cache(
+                self.cfg, batch, self.max_seq, kv_repeat=self.kv_repeat)
+        return self._templates[batch]
+
+    def start(self, prompts: List[np.ndarray],
+              batch: Optional[int] = None) -> None:
+        """Begin a group over mixed-length ``prompts`` (1-D int arrays).
+        ``batch`` pads the compiled batch dimension (rows past
+        ``len(prompts)`` get zero-length prompts and are inert), bounding
+        XLA compiles to one chunk program per retained batch size."""
+        assert self._group is None, "one prefill group at a time"
+        k = len(prompts)
+        kb = batch or k
+        assert kb >= k
+        lens = np.zeros((kb,), np.int64)
+        lens[:k] = [len(p) for p in prompts]
+        if lens.max() > self.max_seq:
+            raise ValueError(f"prompt length {int(lens.max())} exceeds "
+                             f"max_seq {self.max_seq}")
+        n_chunks = max(1, -(-int(lens.max()) // self.chunk))
+        toks = np.zeros((kb, n_chunks * self.chunk), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = np.asarray(p, np.int32)
+        self._group = {"tokens": toks, "lens": lens, "n_chunks": n_chunks,
+                       "idx": 0, "k": k, "emitted": np.zeros(kb, bool),
+                       "cache": self._template(kb)}
+
+    def step(self) -> Tuple[List[Tuple[int, int, int]], bool]:
+        """Run ONE chunk for the in-flight group.
+
+        Returns ``(emitted, done)``: ``emitted`` lists
+        ``(row, first_token, prompt_len)`` for rows whose prompt completed
+        this chunk (their cache rows in :attr:`group_cache` are final and
+        ready to scatter); ``done`` is True once every chunk has run —
+        call :meth:`finish` afterwards."""
+        g = self._group
+        assert g is not None
+        off, clens, fin = chunk_schedule(g["lens"], self.chunk, g["idx"])
+        ctoks = jnp.asarray(g["tokens"][:, off:off + self.chunk])
+        logits, g["cache"] = self._step(self.params, ctoks,
+                                        jnp.asarray(clens), g["cache"])
+        g["idx"] += 1
+        fin &= ~g["emitted"]
+        fin[g["k"]:] = False
+        emitted: List[Tuple[int, int, int]] = []
+        if fin.any():
+            nxt = np.asarray(jnp.argmax(
+                logits[:, -1, :self.cfg.vocab_size], -1), np.int32)
+            emitted = [(int(r), int(nxt[r]), int(g["lens"][r]))
+                       for r in np.nonzero(fin)[0]]
+            g["emitted"] |= fin
+        return emitted, g["idx"] >= g["n_chunks"]
+
+    def finish(self) -> None:
+        """Retire the completed group (template is reused by the next)."""
+        self._group = None

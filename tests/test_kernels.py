@@ -105,6 +105,24 @@ def test_flash_kernel(causal, window, dtype):
     assert err < _tol(dtype), err
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_q_offset(dtype):
+    """Chunked-prefill shape: a short query chunk at per-row offsets
+    against a long KV prefix (offset causal mask, SMEM offsets)."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (3, 4, 16, 32), dtype)
+    k = jax.random.normal(ks[1], (3, 2, 80, 32), dtype)
+    v = jax.random.normal(ks[2], (3, 2, 80, 32), dtype)
+    off = jnp.asarray([0, 13, 64], jnp.int32)
+    o_ref = attention_ref(q, k, v, causal=True, q_offset=off)
+    o_k = flash_attention_pallas(q, k, v, causal=True, q_offset=off,
+                                 block_q=8, block_k=32, interpret=True)
+    scale = float(jnp.abs(o_ref.astype(jnp.float32)).max()) + 1e-6
+    err = float(jnp.abs(o_ref.astype(jnp.float32)
+                        - o_k.astype(jnp.float32)).max()) / scale
+    assert err < _tol(dtype), err
+
+
 # ------------------------------------------------------------ decode attn
 @pytest.mark.parametrize("b,h,kvh,s,d", [(2, 8, 4, 200, 32), (1, 4, 1, 64, 64),
                                          (3, 12, 4, 300, 16)])
