@@ -1,17 +1,22 @@
 #!/usr/bin/env bash
-# Tier-1 gate + decode/prefill perf smokes in one command:
+# Tier-1 gate + decode/prefill/attn perf smokes in one command:
 #   bash scripts/verify.sh
-# Runs the tier-1 pytest command, then the decode perf smoke (fused loop
-# >= 2x the per-token loop) and the prefill smoke (chunked peak-activation
-# memory < one-shot at 8K+ prompts, TTFT regression bound, interleaving
-# fairness 1.0), and fails if any failed (the smokes still run when
-# pre-existing tests fail, so the perf trajectories are always recorded).
+# Runs the tier-1 pytest command WITH the slow kernel-parity sweeps
+# (REPRO_RUN_SLOW=1 — tier-1 alone keeps only the thin parity smokes to
+# stay inside the CI container's 5-minute budget), then the decode perf
+# smoke (fused loop >= 2x the per-token loop), the prefill smoke (chunked
+# peak-activation memory < one-shot at 8K+ prompts, TTFT regression bound,
+# interleaving fairness 1.0), and the attention smoke (per-chunk attention
+# time tracks the live prefix under KV bucketing, flash-decode parity,
+# chunked-prefill parity), and fails if any failed (the smokes still run
+# when pre-existing tests fail, so the perf trajectories are always
+# recorded).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+REPRO_RUN_SLOW=1 python -m pytest -x -q
 tier1=$?
 
 python benchmarks/decode_bench.py --smoke
@@ -20,5 +25,8 @@ smoke=$?
 python benchmarks/prefill_bench.py --smoke
 prefill=$?
 
-echo "tier1=$tier1 decode_smoke=$smoke prefill_smoke=$prefill"
-exit $(( tier1 || smoke || prefill ))
+python benchmarks/attn_bench.py --smoke
+attn=$?
+
+echo "tier1=$tier1 decode_smoke=$smoke prefill_smoke=$prefill attn_smoke=$attn"
+exit $(( tier1 || smoke || prefill || attn ))

@@ -32,7 +32,10 @@ def kv_cache_bytes(cfg: ModelConfig, batch: int, seq: int, p: int = 2) -> int:
         if kind in ("dense", "moe", "dense_moe", "encoder"):
             total += 2 * batch * seq * a.n_kv_heads * a.head_dim * p
         elif kind == "local":
-            s_eff = min(seq, a.sliding_window or seq)
+            # rolling caches always span the full window (init_attn_cache):
+            # the rolling-slot invariant needs every window row even when
+            # the nominal seq is shorter
+            s_eff = a.sliding_window or seq
             total += 2 * batch * s_eff * a.n_kv_heads * a.head_dim * p
         elif kind == "mamba2+shared" and cfg.shared_attn is not None:
             sa = cfg.shared_attn

@@ -1,5 +1,12 @@
-"""Backend-dispatching entry point for decode attention."""
+"""Backend-dispatching entry point for decode attention.
+
+Every backend (including "ref") routes through here, so the model layer has
+a single decode-attention call site; the ref backend lowers to the dense
+masked oracle, the others to the split-K flash-decode Pallas kernel.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
@@ -7,11 +14,21 @@ from repro.kernels import dispatch
 from repro.kernels.attn_decode import ref as _ref
 
 
-def decode_attention(q, k, v, *, valid_len) -> jax.Array:
+def decode_attention(q, k, v, *, valid_len,
+                     block_s: int = 1024,
+                     split_k: Optional[int] = None) -> jax.Array:
+    """q: [B, H, d]; k, v: [B, KVH, S, d]; valid_len: scalar or [B].
+
+    ``split_k`` (None = auto, overridable via ``REPRO_DECODE_SPLIT_K``)
+    selects how many parallel partial-softmax segments the Pallas kernel
+    uses over the KV axis; results are identical for every value."""
     backend = dispatch.get_backend()
     with jax.named_scope("attn_core"):
         if backend == "ref":
             return _ref.decode_attention_ref(q, k, v, valid_len=valid_len)
+        if split_k is None:
+            split_k = dispatch.decode_split_k()
         from repro.kernels.attn_decode.kernel import decode_attention_pallas
         return decode_attention_pallas(q, k, v, valid_len=valid_len,
+                                       block_s=block_s, split_k=split_k,
                                        interpret=(backend == "interpret"))

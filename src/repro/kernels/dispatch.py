@@ -29,6 +29,17 @@ def tpu_compiler_params(**kwargs):
     return cls(**kwargs)
 
 
+def decode_split_k():
+    """Split-K override for the flash-decode kernel: ``REPRO_DECODE_SPLIT_K``
+    pins the number of parallel partial-softmax KV segments; unset or any
+    value < 1 (e.g. 0) lets the kernel pick from the KV length."""
+    env = os.environ.get("REPRO_DECODE_SPLIT_K")
+    if not env:
+        return None
+    val = int(env)
+    return val if val >= 1 else None
+
+
 def default_backend() -> str:
     env = os.environ.get("REPRO_KERNEL_BACKEND")
     if env:

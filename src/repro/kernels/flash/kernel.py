@@ -4,6 +4,14 @@ Online-softmax over KV blocks with (m, l, acc) carried in VMEM scratch
 across the sequential innermost grid dimension.  Causal and sliding-window
 masks are evaluated per block; fully-masked blocks are skipped with
 ``pl.when`` (predicated off on TPU — no MXU work issued).
+
+Live-prefix contract (chunked prefill + KV bucketing): the grid's batch
+dimension makes the causal block-skip *per row* — row b's chunk at offset
+``q_offset[b]`` skips every KV block past ``q_offset[b] + bq - 1``, so a
+short-prefix row in a mixed-length group never reads the long row's KV
+blocks, and rows read at most their own live prefix even before the
+serving layer slices the cache to the bucket.  The bucket (static ``Skv``)
+then bounds what is *resident*, the skip bounds what is *touched*.
 """
 from __future__ import annotations
 

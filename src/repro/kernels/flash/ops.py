@@ -13,7 +13,11 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
                     q_offset=None) -> jax.Array:
     """``q_offset`` (None, scalar, or [B] int32): per-row query-position
-    offset for chunked prefill against an already-filled KV prefix."""
+    offset for chunked prefill against an already-filled KV prefix.
+
+    Callers bound ``Skv`` to the live prefix via KV bucketing
+    (``repro.serving.bucketing``); inside the kernel the per-row causal
+    block-skip early-exits past each row's ``q_offset + Sq``."""
     backend = dispatch.get_backend()
     with jax.named_scope("attn_core"):
         if backend == "ref":

@@ -25,7 +25,7 @@ import jax               # noqa: E402
 
 from repro.configs import ASSIGNED                          # noqa: E402
 from repro.core.config import SHAPES, TPU_V5E               # noqa: E402
-from repro.core.hlo_analysis import analyze_hlo_text        # noqa: E402
+from repro.core.hlo_analysis import analyze_hlo_text, xla_cost_dict  # noqa: E402
 from repro.core.registry import get                         # noqa: E402
 from repro.core.roofline import model_flops                 # noqa: E402
 from repro.core.workload import applicable                  # noqa: E402
@@ -95,7 +95,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
     rec["memory"]["live_gb"] = live / 1e9
     rec["memory"]["fits"] = bool(live <= TPU_V5E.hbm_bytes)
 
-    xca = compiled.cost_analysis() or {}
+    xca = xla_cost_dict(compiled)
     rec["xla_cost"] = {"flops": xca.get("flops", 0.0),
                        "bytes": xca.get("bytes accessed", 0.0)}
 

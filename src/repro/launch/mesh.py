@@ -14,9 +14,13 @@ import jax
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    # jax added sharding.AxisType (and the make_mesh axis_types kwarg) after
+    # 0.4.x; older installs get the same Auto behavior by default
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def mesh_name(mesh) -> str:

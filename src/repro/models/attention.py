@@ -186,25 +186,6 @@ def _local_banded_attention(q, k, v, *, window: int) -> jax.Array:
     return out[:, :sq]
 
 
-def _decode_attention(q, k, v, *, valid_len,
-                      window: Optional[int]) -> jax.Array:
-    """q: [B,1,KV,G,hd]; k,v: full cache [B,Skv,KV,hd]; valid_len: [B]
-    per-row valid prefix lengths (slots decode at independent positions)."""
-    with jax.named_scope("attn_core"):
-        scale = 1.0 / math.sqrt(q.shape[-1])
-        s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
-                       preferred_element_type=jnp.float32) * scale
-        kpos = jnp.arange(k.shape[1])[None, :]
-        vl = valid_len[:, None]
-        if window is not None:
-            # rolling cache: every slot is within the window by construction
-            vl = jnp.minimum(vl, window)
-        mask = kpos < vl                                   # [B, Skv]
-        s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
-        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
-        return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
-
-
 def attention(p: Dict, x: jax.Array, a: AttnConfig, *,
               rope: Optional[Tuple[jax.Array, jax.Array]],
               window: Optional[int] = None,
@@ -348,19 +329,19 @@ def attention(p: Dict, x: jax.Array, a: AttnConfig, *,
                         ("batch", "kv_seq", "kv_heads", None))
         vcr = constrain(_repeat_kv(vc.astype(x.dtype), kv_repeat),
                         ("batch", "kv_seq", "kv_heads", None))
-        if kdispatch.get_backend() != "ref":
-            from repro.kernels.attn_decode.ops import decode_attention
-            bq, _, nkv_, g_, hd_ = q.shape
-            qh = q.reshape(bq, nkv_ * g_, hd_)
-            valid = jnp.minimum(posv + 1, kc.shape[1])
-            o = decode_attention(qh, kcr.transpose(0, 2, 1, 3),
-                                 vcr.transpose(0, 2, 1, 3),
-                                 valid_len=valid)
-            o = o.reshape(bq, 1, nkv_, g_, hd_)
-        else:
-            o = _decode_attention(q, kcr, vcr,
-                                  valid_len=jnp.minimum(posv + 1, skv),
-                                  window=window)
+        # all backends route through the flash-decode entry point (the ref
+        # backend dispatches to the dense oracle inside).  valid_len clamps
+        # to skv, which for rolling caches equals the window — every slot of
+        # a wrapped rolling cache is live, partially-filled caches mask the
+        # unwritten tail.
+        from repro.kernels.attn_decode.ops import decode_attention
+        bq, _, nkv_, g_, hd_ = q.shape
+        qh = q.reshape(bq, nkv_ * g_, hd_)
+        valid = jnp.minimum(posv + 1, skv)
+        o = decode_attention(qh, kcr.transpose(0, 2, 1, 3),
+                             vcr.transpose(0, 2, 1, 3),
+                             valid_len=valid)
+        o = o.reshape(bq, 1, nkv_, g_, hd_)
 
     o = o.reshape(b, s, a.n_heads, a.head_dim)
     with jax.named_scope("o_proj"):
@@ -374,6 +355,11 @@ def init_attn_cache(a: AttnConfig, batch: int, max_seq: int, *,
     # kv_repeat intentionally ignored: the cache always stores the exact
     # (unreplicated) kv heads; replication happens at compute time.
     del kv_repeat
-    skv = min(max_seq, window) if window is not None else max_seq
+    # Rolling sliding-window caches are always the FULL window, even when
+    # max_seq < window: the rolling invariant (slot i holds the token with
+    # pos % window == i) needs all window slots, otherwise decode writes
+    # past a clamped cache end are silently dropped and attention goes
+    # stale the moment pos crosses the clamp.
+    skv = window if window is not None else max_seq
     shape = (batch, skv, a.n_kv_heads, a.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

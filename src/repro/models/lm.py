@@ -27,7 +27,13 @@ serving engine admits requests at different times).  Three entry points:
 
 Mamba decode steps route through the fused conv-shift + state-update
 kernels in ``repro.kernels.decode_fused`` (backend selected by
-``REPRO_KERNEL_BACKEND`` / ``repro.kernels.dispatch``)."""
+``REPRO_KERNEL_BACKEND`` / ``repro.kernels.dispatch``).
+
+:func:`lm_prefill_chunk` and :func:`decode_tokens` accept a static
+``kv_bucket``: the KV caches are sliced to that extent around the compiled
+body so attention FLOPs/IO track the live prefix instead of ``max_seq``
+(bit-identical outputs; see ``repro.serving.bucketing`` for how callers
+pick the bucket from a bounded power-of-two ladder)."""
 from __future__ import annotations
 
 from typing import Any, Dict, Optional, Tuple
@@ -228,7 +234,8 @@ def lm_prefill(cfg: ModelConfig, params, inputs: Dict[str, jax.Array], cache,
 def lm_prefill_chunk(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
                      cache, *, lengths: Optional[jax.Array] = None,
                      kv_repeat: int = 1, shared_kv_repeat: int = 1,
-                     moe_groups: int = 1) -> Tuple[jax.Array, Any]:
+                     moe_groups: int = 1,
+                     kv_bucket: Optional[int] = None) -> Tuple[jax.Array, Any]:
     """One state-carrying prefill chunk: process ``S`` prompt tokens
     starting at each row's running offset ``cache["pos"]``.
 
@@ -242,8 +249,20 @@ def lm_prefill_chunk(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
     a prompt in order therefore reproduces :func:`lm_prefill` exactly (up
     to fp tolerance) with peak activation memory O(chunk), not O(prompt).
 
+    ``kv_bucket`` (static int, or None for the full cache) bounds attention
+    to the live prefix: the KV caches are sliced to their first
+    ``kv_bucket`` rows before the flash kernels run and written back after,
+    so the chunk's attention FLOPs/IO scale with the true prefix rather
+    than ``max_seq``.  The caller must pick ``kv_bucket >= max(pos) +
+    chunk`` (see ``repro.serving.bucketing``); outputs are bit-identical to
+    the unbucketed program.
+
     Returns ``(logits of each row's last valid chunk token [B,1,V],
     updated cache)`` with ``pos`` advanced by ``lengths``."""
+    _check_kv_bucket(cfg, kv_bucket)
+    full_cache = cache
+    if kv_bucket is not None:
+        cache = _slice_kv_cache(cache, kv_bucket)
     x = _embed(cfg, params, inputs)
     b, s = x.shape[0], x.shape[1]
     pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), (b,))
@@ -263,7 +282,10 @@ def lm_prefill_chunk(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
     last = jnp.clip(lengths - 1, 0, s - 1)
     x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
     logits = _head(cfg, params, x_last)
-    return logits, {"segments": new_segs, "pos": pos + lengths}
+    new_cache = {"segments": new_segs, "pos": pos + lengths}
+    if kv_bucket is not None:
+        new_cache = _unslice_kv_cache(full_cache, new_cache)
+    return logits, new_cache
 
 
 def lm_decode_step(cfg: ModelConfig, params, token: jax.Array, cache, *,
@@ -288,7 +310,8 @@ def lm_decode_step(cfg: ModelConfig, params, token: jax.Array, cache, *,
 def decode_tokens(cfg: ModelConfig, params, cache, first_token: jax.Array,
                   n: int, *, kv_repeat: int = 1, shared_kv_repeat: int = 1,
                   moe_groups: int = 1, temperature: float = 0.0,
-                  rng: Optional[jax.Array] = None
+                  rng: Optional[jax.Array] = None,
+                  kv_bucket: Optional[int] = None
                   ) -> Tuple[jax.Array, Any]:
     """Fused multi-token decode: run ``n`` generation steps inside one
     ``jax.lax.scan``.
@@ -300,10 +323,21 @@ def decode_tokens(cfg: ModelConfig, params, cache, first_token: jax.Array,
     per token.  Returns ``(tokens [B, n] int32, cache)`` — token ``[:, i]``
     is the model's output after consuming the (i-1)-th emitted token,
     exactly matching ``n`` sequential :func:`lm_decode_step` calls.
+
+    ``kv_bucket`` (static int >= ``max(live pos) + n``, or None) slices the
+    KV caches to the live prefix ONCE outside the scan, runs the whole
+    burst against the slice, and writes it back once at the end — decode
+    attention reads ``kv_bucket`` rows per token instead of ``max_seq``,
+    bit-identically (rows of retired slots whose ``pos`` exceeds the bucket
+    write nothing and produce finite garbage, as on the full-cache path).
     """
     sample = temperature > 0.0
     if sample and rng is None:
         raise ValueError("temperature sampling requires an rng key")
+    _check_kv_bucket(cfg, kv_bucket)
+    full_cache = cache
+    if kv_bucket is not None:
+        cache = _slice_kv_cache(cache, kv_bucket)
 
     def select(logits: jax.Array, key) -> jax.Array:
         lg = logits[:, 0, :cfg.vocab_size]
@@ -325,7 +359,52 @@ def decode_tokens(cfg: ModelConfig, params, cache, first_token: jax.Array,
     keys = jax.random.split(rng, n) if sample else None
     (_, cache), toks = jax.lax.scan(
         step, (first_token.astype(jnp.int32), cache), keys, length=n)
+    if kv_bucket is not None:
+        cache = _unslice_kv_cache(full_cache, cache)
     return toks.T, cache                                   # [B, n]
+
+
+def _is_kv_leaf(path) -> bool:
+    """Attention-cache leaves are the dict entries keyed "k"/"v" (possibly
+    nested under "attn" for shared blocks); mamba conv/ssm states and "pos"
+    never carry those keys."""
+    last = path[-1]
+    return getattr(last, "key", None) in ("k", "v")
+
+
+def _check_kv_bucket(cfg: ModelConfig, kv_bucket: Optional[int]) -> None:
+    if kv_bucket is None:
+        return
+    if kv_bucket < 1:
+        raise ValueError(f"kv_bucket must be >= 1, got {kv_bucket}")
+    if any(kind in ("local", "encoder") for kind in cfg.layer_kinds):
+        raise ValueError(
+            "kv_bucket requires append-only full-length KV caches; rolling "
+            "sliding-window / encoder layers cannot be prefix-sliced")
+
+
+def _slice_kv_cache(cache, bucket: int):
+    """Slice every KV-cache leaf to its first ``bucket`` rows (axis 2 of the
+    stacked [n_rep, B, Skv, KV, hd] leaves).  Callers guarantee every read
+    and write of the upcoming program lands below ``bucket``; the masked
+    tail contributes exact zeros, so outputs are bit-identical to the
+    full-cache program while attention FLOPs/IO track the live prefix."""
+    def f(path, leaf):
+        if _is_kv_leaf(path) and leaf.shape[2] > bucket:
+            return jax.lax.slice_in_dim(leaf, 0, bucket, axis=2)
+        return leaf
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def _unslice_kv_cache(full, sliced):
+    """Write bucket-sliced KV leaves back into the full-extent cache (rows
+    past the bucket were untouched by construction)."""
+    def f(path, f_leaf, s_leaf):
+        if _is_kv_leaf(path) and s_leaf.shape[2] < f_leaf.shape[2]:
+            return jax.lax.dynamic_update_slice_in_dim(
+                f_leaf, s_leaf.astype(f_leaf.dtype), 0, axis=2)
+        return s_leaf
+    return jax.tree_util.tree_map_with_path(f, full, sliced)
 
 
 def _cache_max_seq(cfg: ModelConfig, cache) -> Optional[int]:

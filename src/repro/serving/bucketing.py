@@ -1,0 +1,61 @@
+"""Static KV bucketing: bound attention reads to the live prefix.
+
+The paper's operator breakdown shows attention over the KV window dominating
+Transformer/hybrid latency as context grows.  Without bucketing, every
+chunked-prefill step and decode burst attends the *entire* ``max_seq`` cache
+under a mask, so a 512-token chunk at offset 1K pays the same attention
+FLOPs/IO as one at offset 56K — exactly the scaling curve the paper measures
+is flattened into a constant.
+
+The fix is a host-side *bucket ladder*: before dispatching a compiled chunk
+or decode program, the caller picks the smallest power-of-two KV extent that
+covers the live prefix (``max(pos) + chunk``) and passes it as a static
+argument.  The models layer slices the KV cache to that extent, runs the
+flash/decode kernels over the slice, and writes the slice back — masked
+attention over the dropped tail contributes exact zeros, so outputs are
+bit-identical to the full-cache program while FLOPs/IO track the true
+prefix.  Because the ladder has O(log2(max_seq)) rungs, XLA compiles a
+bounded number of programs no matter how positions evolve.
+
+Edge discipline (the classic off-by-one): a prefix that lands exactly on a
+rung (``pos + chunk == bucket``) selects *that* rung — never the next one
+(a spurious recompile) and never the previous one (the newest KV row would
+fall off the slice and decode would read a stale row).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+# Smallest rung: below this, slicing saves nothing but still costs a compile.
+MIN_BUCKET = 128
+
+
+def bucket_ladder(max_seq: int, min_bucket: int = MIN_BUCKET) -> Tuple[int, ...]:
+    """Power-of-two rungs ``min_bucket, 2*min_bucket, ... < max_seq`` plus
+    ``max_seq`` itself as the top rung (so the full cache is always a valid
+    selection and admission control keeps its ``max_seq`` contract)."""
+    if max_seq <= 0:
+        raise ValueError(f"max_seq must be positive, got {max_seq}")
+    rungs = []
+    b = min_bucket
+    while b < max_seq:
+        rungs.append(b)
+        b *= 2
+    rungs.append(max_seq)
+    return tuple(rungs)
+
+
+def select_kv_bucket(needed: int, max_seq: int,
+                     min_bucket: int = MIN_BUCKET) -> int:
+    """Smallest rung >= ``needed`` (the live prefix extent the next program
+    will read *and* write: ``max(pos) + chunk``).
+
+    ``needed == rung`` returns exactly that rung; ``needed`` may not exceed
+    ``max_seq`` (admission control rejects such prompts earlier)."""
+    if needed > max_seq:
+        raise ValueError(
+            f"needed KV extent {needed} exceeds max_seq {max_seq}")
+    for b in bucket_ladder(max_seq, min_bucket):
+        if b >= needed:
+            return b
+    return max_seq  # pragma: no cover — ladder always ends at max_seq

@@ -25,6 +25,7 @@ restores it once a slot frees up.
 """
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -36,8 +37,12 @@ from repro.core.config import ModelConfig
 from repro.distributed.sharding import ShardingPlan
 from repro.models.lm import (decode_tokens, init_lm_cache, lm_decode_step,
                              lm_forward, lm_prefill)
+from repro.serving.bucketing import select_kv_bucket
 from repro.serving.cache import offload_slot, restore_slot
-from repro.serving.prefill import ChunkedPrefill, supports_chunked_prefill
+from repro.serving.prefill import (ChunkedPrefill, _has_attn_cache,
+                                   supports_chunked_prefill)
+
+log = logging.getLogger(__name__)
 
 
 def make_prefill_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
@@ -67,9 +72,11 @@ def make_decode_tokens(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
     kv_repeat = plan.kv_repeat if plan else 1
     moe_groups = plan.moe_groups if plan else 1
 
-    def decode_n(params, cache, first_token, n: int):
+    def decode_n(params, cache, first_token, n: int,
+                 kv_bucket: Optional[int] = None):
         return decode_tokens(cfg, params, cache, first_token, n,
-                             kv_repeat=kv_repeat, moe_groups=moe_groups)
+                             kv_repeat=kv_repeat, moe_groups=moe_groups,
+                             kv_bucket=kv_bucket)
 
     return decode_n
 
@@ -157,6 +164,14 @@ class ServingEngine:
     blocks decode progress on live slots.  Per-slot ``pos`` means
     late-admitted slots attend only over their own valid cache rows.
 
+    Attention work is bounded to the live prefix by static KV bucketing
+    (:mod:`repro.serving.bucketing`): every decode burst and prefill chunk
+    runs with the smallest power-of-two KV extent covering
+    ``max(live pos) + block`` — bit-identical outputs, O(log max_seq)
+    compiled programs, and FLOPs/IO that grow with the true context
+    instead of ``max_seq``.  Architectures on the grouped fallback
+    (rolling windows, encoders, frontends) decode against the full cache.
+
     When queued prompts are starved (no slot has freed for
     ``preempt_after`` iterations and no prefill is in flight), the live
     slot with the most remaining decode work is offloaded to host memory
@@ -176,12 +191,25 @@ class ServingEngine:
         self.cache = init_lm_cache(cfg, slots, max_seq, kv_repeat=kv_repeat)
         self._prefill = jax.jit(make_prefill_step(cfg, plan))
         self._decode_n = jax.jit(make_decode_tokens(cfg, plan),
-                                 static_argnames=("n",))
+                                 static_argnames=("n", "kv_bucket"))
         self._scatter = jax.jit(_scatter_group)
         self.kv_repeat = kv_repeat
         self.chunk_size = chunk_size or min(256, max_seq)
         self.preempt_after = preempt_after
         self.chunked = supports_chunked_prefill(cfg)
+        # KV bucketing needs append-only full-length caches — exactly the
+        # chunked-prefill precondition — and is pointless without KV.
+        self.kv_buckets = self.chunked and _has_attn_cache(cfg)
+        if not self.chunked:
+            reasons = [k for k in ("local", "encoder")
+                       if k in cfg.layer_kinds]
+            if cfg.frontend != "none":
+                reasons.append(f"{cfg.frontend}-frontend")
+            log.warning(
+                "%s: chunked prefill unsupported (%s layers); falling back "
+                "to one-shot grouped prefill admission — long prompts "
+                "prefill monolithically and KV bucketing is disabled",
+                cfg.name, "/".join(reasons) or "unknown")
         self._chunked_prefill = (
             ChunkedPrefill(cfg, params, max_seq=max_seq,
                            chunk_size=self.chunk_size, plan=plan)
@@ -201,6 +229,9 @@ class ServingEngine:
         self.stats = {"iters": 0, "decode_tokens": 0, "prefill_chunks": 0,
                       "preemptions": 0, "restores": 0,
                       "interleave_iters": 0, "interleave_decode_iters": 0}
+        # distinct KV buckets the decode loop has run in (bounded by the
+        # bucket ladder — observability for the compile-count discipline)
+        self.buckets_used: set = set()
 
     def submit(self, req: Request) -> None:
         # validate here, before admission can pop the request and reserve
@@ -236,7 +267,15 @@ class ServingEngine:
 
     def _admit(self) -> None:
         if not self.chunked:
-            self._admit_grouped()
+            # deterministic fallback path: one-shot grouped admission plus
+            # the same starvation preemption the chunked path gets (a
+            # queued prompt must never wait forever behind long decodes)
+            if self._admit_grouped() or not self.queue:
+                self._starved = 0
+            else:
+                self._starved += 1
+                if self._starved >= self.preempt_after:
+                    self._preempt()
             return
         reserved = {b for b, _ in self._pending}
         free = [b for b in range(self.slots)
@@ -310,22 +349,25 @@ class ServingEngine:
         self._starved = 0
         self.stats["preemptions"] += 1
 
-    def _admit_grouped(self) -> None:
+    def _admit_grouped(self) -> bool:
         """Fallback admission for architectures without chunked-prefill
         support (rolling-window caches, encoders): batched same-length
-        one-shot prefills into preallocated templates."""
+        one-shot prefills into preallocated templates.  Returns whether any
+        request was admitted or restored (the starvation signal)."""
         free = [b for b in range(self.slots) if self.live[b] is None]
         batch: List[Tuple[int, Request]] = []
+        restored = False
         while free and self.queue:
             req = self.queue[0]
             if req.blob is not None:
                 self.queue.pop(0)
                 self._restore(free.pop(0), req)
+                restored = True
                 continue
             self.queue.pop(0)
             batch.append((free.pop(0), req))
         if not batch:
-            return
+            return restored
         # one batched prefill per prompt length (stale rows beyond the
         # prompt are masked by the per-slot pos, so templates need no reset)
         by_len: Dict[int, List[Tuple[int, Request]]] = {}
@@ -352,6 +394,7 @@ class ServingEngine:
                 self.tokens[b, 0] = int(nxt[i])
                 self.pos[b] = len(req.prompt)
                 self.live[b] = req
+        return True
 
     # ------------------------------------------------------------- decode
     def step(self) -> int:
@@ -366,8 +409,20 @@ class ServingEngine:
             return len(self.queue) + len(self._pending)
         kblk = self.decode_block
         self.cache = dict(self.cache, pos=jnp.asarray(self.pos, jnp.int32))
+        kv_bucket = None
+        if self.kv_buckets:
+            # bound the whole burst's attention to the live prefix: every
+            # live slot reads/writes below max(pos) + decode_block.  Stale
+            # pos of retired slots is excluded (their rows neither read
+            # sensibly nor write at all inside the bucket).
+            live_pos = [int(self.pos[b]) for b, r in enumerate(self.live)
+                        if r is not None]
+            kv_bucket = select_kv_bucket(
+                min(max(live_pos) + kblk, self.max_seq), self.max_seq)
+            self.buckets_used.add(kv_bucket)
         toks, self.cache = self._decode_n(self.params, self.cache,
-                                          jnp.asarray(self.tokens), n=kblk)
+                                          jnp.asarray(self.tokens), n=kblk,
+                                          kv_bucket=kv_bucket)
         toks = np.asarray(toks)                     # one host sync per block
         n_live = 0
         decoded = 0

@@ -48,6 +48,13 @@ import numpy as np
 from repro.core.config import ModelConfig
 from repro.distributed.sharding import ShardingPlan
 from repro.models.lm import init_lm_cache, lm_prefill_chunk
+from repro.serving.bucketing import select_kv_bucket
+
+
+def _has_attn_cache(cfg: ModelConfig) -> bool:
+    """Only architectures with attention layers hold KV caches worth
+    bucketing; pure-SSM stacks would pay a compile per rung for nothing."""
+    return cfg.attn is not None or cfg.shared_attn is not None
 
 
 def supports_chunked_prefill(cfg: ModelConfig) -> bool:
@@ -67,24 +74,26 @@ def _make_chunk_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
     kv_repeat = plan.kv_repeat if plan else 1
     moe_groups = plan.moe_groups if plan else 1
 
-    def chunk_step(params, tokens, lengths, cache):
+    def chunk_step(params, tokens, lengths, cache, kv_bucket=None):
         return lm_prefill_chunk(cfg, params, {"tokens": tokens}, cache,
                                 lengths=lengths, kv_repeat=kv_repeat,
-                                moe_groups=moe_groups)
+                                moe_groups=moe_groups, kv_bucket=kv_bucket)
 
     return chunk_step
 
 
 # jitted chunk steps keyed by everything the closure actually depends on
 # (cfg plus the plan's kv_repeat/moe_groups): repeated chunked_prefill
-# calls must reuse the compiled program, not re-trace
+# calls must reuse the compiled program, not re-trace.  kv_bucket is a
+# static argument: one compile per bucket-ladder rung actually touched.
 _STEP_CACHE: Dict[Tuple[ModelConfig, int, int], Any] = {}
 
 
 def _jitted_chunk_step(cfg: ModelConfig, plan: Optional[ShardingPlan]):
     key = (cfg, plan.kv_repeat if plan else 1, plan.moe_groups if plan else 1)
     if key not in _STEP_CACHE:
-        _STEP_CACHE[key] = jax.jit(_make_chunk_step(cfg, plan))
+        _STEP_CACHE[key] = jax.jit(_make_chunk_step(cfg, plan),
+                                   static_argnames=("kv_bucket",))
     return _STEP_CACHE[key]
 
 
@@ -101,25 +110,49 @@ def chunk_schedule(lens: np.ndarray, chunk: int,
     return off, clens, fin
 
 
+def _cache_kv_extent(cache) -> Optional[int]:
+    """KV row capacity of a cache pytree (max Skv across "k"/"v" leaves,
+    stacked [n_rep, B, Skv, KV, hd]); None when no layer holds a KV cache.
+    Uses the same leaf predicate the models layer slices with, so the
+    selected bucket always bounds exactly the leaves that get sliced."""
+    from repro.models.lm import _is_kv_leaf
+    best = None
+    for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
+        if _is_kv_leaf(path):
+            best = max(best or 0, int(leaf.shape[2]))
+    return best
+
+
 def chunked_prefill(cfg: ModelConfig, params, tokens: jax.Array, cache, *,
                     chunk_size: int, lengths: Optional[Sequence[int]] = None,
                     plan: Optional[ShardingPlan] = None,
-                    step=None) -> Tuple[jax.Array, Any]:
+                    step=None, kv_buckets: bool = True
+                    ) -> Tuple[jax.Array, Any]:
     """Prefill ``tokens`` [B, S] (right-padded, per-row valid ``lengths``)
     in ``chunk_size`` chunks.  Drop-in replacement for
     :func:`repro.models.lm.lm_prefill` — returns (last-valid-token logits
     [B, 1, V], filled cache) — but runs the fixed-shape chunk program
     ceil(S/chunk) times instead of one O(S) program.
 
+    ``kv_buckets`` (default on) bounds each chunk's attention to the live
+    prefix: chunk ``i`` runs with a static KV bucket covering
+    ``(i+1) * chunk`` rows (smallest power-of-two rung), so early chunks
+    pay early-prefix FLOPs/IO instead of ``max_seq``.  Outputs are
+    bit-identical either way.
+
     ``step`` overrides the compiled chunk callable (e.g. an AOT-compiled
-    executable, so benchmarks don't pay a second trace+compile).
+    executable, so benchmarks don't pay a second trace+compile); bucketing
+    is disabled then — the executable's shapes are fixed by its caller.
     """
     tokens = jnp.asarray(tokens)
     b, total = tokens.shape
     lens = (np.full((b,), total, np.int64) if lengths is None
             else np.asarray(lengths, np.int64))
+    kv_extent = None
     if step is None:
         step = _jitted_chunk_step(cfg, plan)
+        if kv_buckets and supports_chunked_prefill(cfg) and _has_attn_cache(cfg):
+            kv_extent = _cache_kv_extent(cache)
     n_chunks = max(1, -(-total // chunk_size))
     pad = n_chunks * chunk_size - total
     if pad:
@@ -127,8 +160,14 @@ def chunked_prefill(cfg: ModelConfig, params, tokens: jax.Array, cache, *,
     logits = None
     for i in range(n_chunks):
         off, clens, fin = chunk_schedule(lens, chunk_size, i)
-        lg, cache = step(params, tokens[:, off:off + chunk_size],
-                         jnp.asarray(clens), cache)
+        if kv_extent is not None:
+            bucket = select_kv_bucket(min(off + chunk_size, kv_extent),
+                                      kv_extent)
+            lg, cache = step(params, tokens[:, off:off + chunk_size],
+                             jnp.asarray(clens), cache, kv_bucket=bucket)
+        else:
+            lg, cache = step(params, tokens[:, off:off + chunk_size],
+                             jnp.asarray(clens), cache)
         if logits is None:
             logits = lg
         elif fin.any():
@@ -154,6 +193,7 @@ class ChunkedPrefill:
         self.max_seq = max_seq
         self.chunk = int(chunk_size)
         self.kv_repeat = plan.kv_repeat if plan else 1
+        self.kv_buckets = _has_attn_cache(cfg)
         self._step = _jitted_chunk_step(cfg, plan)
         self._templates: Dict[int, Any] = {}
         self._group: Optional[Dict[str, Any]] = None
@@ -209,8 +249,14 @@ class ChunkedPrefill:
         assert g is not None
         off, clens, fin = chunk_schedule(g["lens"], self.chunk, g["idx"])
         ctoks = jnp.asarray(g["tokens"][:, off:off + self.chunk])
+        # every row's pos <= off, so a bucket covering off + chunk bounds
+        # all of this chunk's KV reads and writes to the live prefix
+        kv_bucket = (select_kv_bucket(min(off + self.chunk, self.max_seq),
+                                      self.max_seq)
+                     if self.kv_buckets else None)
         logits, g["cache"] = self._step(self.params, ctoks,
-                                        jnp.asarray(clens), g["cache"])
+                                        jnp.asarray(clens), g["cache"],
+                                        kv_bucket=kv_bucket)
         g["idx"] += 1
         fin &= ~g["emitted"]
         fin[g["k"]:] = False

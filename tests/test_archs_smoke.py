@@ -48,7 +48,12 @@ def test_reduced_forward(arch):
     assert not np.isnan(arr).any(), f"{arch}: NaN logits"
 
 
-@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("arch", [
+    # the two heaviest reduced configs train only in the slow sweep
+    # (scripts/verify.sh); their forward smokes stay in tier-1
+    pytest.param(a, marks=pytest.mark.slow)
+    if a in ("zamba2-2.7b", "gemma3-1b") else a
+    for a in ASSIGNED])
 def test_reduced_train_step(arch):
     cfg = reduced(get(arch))
     params = init_lm_params(cfg, jax.random.PRNGKey(0))

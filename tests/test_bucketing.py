@@ -1,0 +1,190 @@
+"""KV bucketing: selector properties (edges included) and bit-exactness of
+bucket-sliced prefill/decode against the full-cache programs.
+
+The boundary case is the load-bearing one: a prefix landing exactly on a
+rung (``pos + chunk == bucket``) must select that rung — one rung lower
+would drop the newest KV row (a stale-read at decode), one higher is a
+spurious recompile."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import AttnConfig, ModelConfig, SSMConfig
+from repro.models.lm import (decode_tokens, init_lm_cache, init_lm_params,
+                             lm_prefill, lm_prefill_chunk)
+from repro.serving.bucketing import MIN_BUCKET, bucket_ladder, select_kv_bucket
+from repro.serving.prefill import chunked_prefill
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _dense_cfg():
+    return ModelConfig(
+        name="dense", family="dense", n_layers=2, d_model=64, d_ff=128,
+        vocab_size=97, attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16),
+        layer_pattern=("dense",), vocab_pad_multiple=16)
+
+
+def _hybrid_cfg():
+    return ModelConfig(
+        name="hybrid", family="hybrid", n_layers=4, d_model=64, d_ff=0,
+        vocab_size=97, ssm=SSMConfig(d_state=16, headdim=16, chunk=8),
+        layer_pattern=("mamba2", "mamba2+shared"),
+        shared_attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=16),
+        shared_attn_d_ff=128, vocab_pad_multiple=16)
+
+
+# ------------------------------------------------------------- the selector
+def test_ladder_shape():
+    lad = bucket_ladder(4096)
+    assert lad[0] == MIN_BUCKET and lad[-1] == 4096
+    assert list(lad) == sorted(set(lad))
+    assert len(lad) <= 2 + int(np.log2(4096 / MIN_BUCKET))
+    # non-power-of-two max_seq still tops the ladder
+    assert bucket_ladder(5000)[-1] == 5000
+    # tiny max_seq: a single full-cache rung
+    assert bucket_ladder(64) == (64,)
+
+
+@pytest.mark.parametrize("max_seq", [256, 1000, 4096])
+def test_selector_minimal_and_monotone(max_seq):
+    lad = bucket_ladder(max_seq)
+    prev = 0
+    for needed in range(1, max_seq + 1):
+        b = select_kv_bucket(needed, max_seq)
+        assert b >= needed, (needed, b)                   # never a stale row
+        assert b in lad
+        smaller = [r for r in lad if needed <= r < b]
+        assert not smaller, f"non-minimal rung {b} for {needed}"
+        assert b >= prev                                   # monotone in prefix
+        prev = b
+    # compile count over a whole ramp == rungs actually needed
+    used = {select_kv_bucket(n, max_seq) for n in range(1, max_seq + 1)}
+    assert used == set(lad)
+
+
+def test_selector_edges_exact():
+    """needed == rung selects that rung; needed == rung + 1 the next."""
+    max_seq = 4096
+    for rung in bucket_ladder(max_seq):
+        assert select_kv_bucket(rung, max_seq) == rung
+        if rung > 1:
+            assert select_kv_bucket(rung - 1, max_seq) == rung
+        if rung < max_seq:
+            nxt = select_kv_bucket(rung + 1, max_seq)
+            assert nxt > rung and nxt == min(
+                r for r in bucket_ladder(max_seq) if r > rung)
+
+
+def test_selector_rejects_overflow():
+    with pytest.raises(ValueError):
+        select_kv_bucket(4097, 4096)
+
+
+def test_selector_property_sweep():
+    """Hypothesis sweep around every edge of randomized ladders."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(max_seq=st.integers(MIN_BUCKET, 1 << 16),
+           jitter=st.integers(-1, 1),
+           rung_idx=st.integers(0, 12))
+    def check(max_seq, jitter, rung_idx):
+        lad = bucket_ladder(max_seq)
+        rung = lad[min(rung_idx, len(lad) - 1)]
+        needed = min(max(rung + jitter, 1), max_seq)
+        b = select_kv_bucket(needed, max_seq)
+        assert needed <= b <= max_seq
+        assert not [r for r in lad if needed <= r < b]
+
+    check()
+
+
+# ----------------------------------------------- bit-exactness at the edges
+@pytest.mark.parametrize("arch", [
+    "dense", pytest.param("hybrid", marks=pytest.mark.slow)])
+def test_chunk_bucket_edge_bit_exact(arch):
+    """A chunk whose end lands exactly on its bucket (pos + chunk == bucket)
+    must produce byte-identical logits and cache to the unbucketed step —
+    the newest KV row sits at index bucket-1 and must not be dropped."""
+    cfg = {"dense": _dense_cfg, "hybrid": _hybrid_cfg}[arch]()
+    params = init_lm_params(cfg, KEY)
+    B, C, MS = 2, 8, 64
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 4 * C), 0,
+                              cfg.vocab_size, jnp.int32)
+    cache_b = init_lm_cache(cfg, B, MS)
+    cache_f = init_lm_cache(cfg, B, MS)
+    step = jax.jit(
+        lambda p, t, c, kv_bucket: lm_prefill_chunk(
+            cfg, p, {"tokens": t}, c, kv_bucket=kv_bucket),
+        static_argnames=("kv_bucket",))
+    for i in range(4):
+        chunk = toks[:, i * C:(i + 1) * C]
+        # exact edge: the bucket is precisely the prefix written so far
+        lg_b, cache_b = step(params, chunk, cache_b, (i + 1) * C)
+        lg_f, cache_f = step(params, chunk, cache_f, None)
+        np.testing.assert_array_equal(np.asarray(lg_b), np.asarray(lg_f))
+    for a, b in zip(jax.tree_util.tree_leaves(cache_b),
+                    jax.tree_util.tree_leaves(cache_f)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("arch", [
+    "dense", pytest.param("hybrid", marks=pytest.mark.slow)])
+def test_decode_bucket_edge_bit_exact(arch):
+    """decode_tokens under the tightest legal bucket (max(pos) + n) must
+    emit the same tokens and cache as the full-cache burst."""
+    cfg = {"dense": _dense_cfg, "hybrid": _hybrid_cfg}[arch]()
+    params = init_lm_params(cfg, KEY)
+    B, L, MS, N = 2, 13, 96, 6
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, L), 0,
+                              cfg.vocab_size, jnp.int32)
+    logits, cache = lm_prefill(cfg, params, {"tokens": toks},
+                               init_lm_cache(cfg, B, MS))
+    first = jnp.argmax(logits[..., :cfg.vocab_size], -1).astype(jnp.int32)
+    t_full, c_full = decode_tokens(cfg, params, cache, first, N)
+    t_b, c_b = decode_tokens(cfg, params, cache, first, N,
+                             kv_bucket=L + N)          # the exact edge
+    np.testing.assert_array_equal(np.asarray(t_b), np.asarray(t_full))
+    for a, b in zip(jax.tree_util.tree_leaves(c_b),
+                    jax.tree_util.tree_leaves(c_full)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chunked_prefill_buckets_match_oneshot():
+    """The serving helper with bucketing on (its default) still reproduces
+    one-shot prefill: logits and an 8-token greedy continuation."""
+    cfg = _dense_cfg()
+    params = init_lm_params(cfg, KEY)
+    B, L, MS = 2, 21, 200
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, L), 0,
+                              cfg.vocab_size, jnp.int32)
+    ref_logits, ref_cache = lm_prefill(cfg, params, {"tokens": toks},
+                                       init_lm_cache(cfg, B, MS))
+    logits, cache = chunked_prefill(cfg, params, toks,
+                                    init_lm_cache(cfg, B, MS), chunk_size=8)
+    # bf16 logits: tolerance above bf16 ULP; the bit-exact continuation
+    # below is the strong gate
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(ref_logits, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    first = jnp.argmax(ref_logits[..., :cfg.vocab_size], -1).astype(jnp.int32)
+    t_ref, _ = decode_tokens(cfg, params, ref_cache, first, 8)
+    t_chk, _ = decode_tokens(cfg, params, cache, first, 8)
+    np.testing.assert_array_equal(np.asarray(t_chk), np.asarray(t_ref))
+
+
+def test_kv_bucket_rejects_rolling_and_encoder():
+    local = ModelConfig(
+        name="local", family="dense", n_layers=2, d_model=64, d_ff=128,
+        vocab_size=97,
+        attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16,
+                        sliding_window=8),
+        layer_pattern=("local", "dense"), vocab_pad_multiple=16)
+    params = init_lm_params(local, KEY)
+    cache = init_lm_cache(local, 1, 32)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    with pytest.raises(ValueError):
+        decode_tokens(local, params, cache, tok, 2, kv_bucket=16)

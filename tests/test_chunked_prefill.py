@@ -54,7 +54,11 @@ def _run_chunked(cfg, params, toks, max_seq, chunk):
 
 @pytest.mark.parametrize("arch", ["dense", "mamba2", "mamba1", "hybrid",
                                   "hybrid_par"])
-@pytest.mark.parametrize("chunk", [7, 8, 21])
+@pytest.mark.parametrize("chunk", [
+    7,                                                 # ragged — tier-1 smoke
+    pytest.param(8, marks=pytest.mark.slow),           # even chunking
+    pytest.param(21, marks=pytest.mark.slow),          # one-shot-sized
+])
 def test_chunk_parity(arch, chunk):
     """Chunked == one-shot: logits, pos, and an 8-token greedy
     continuation, for even and ragged chunkings (21 = one-shot-sized)."""
@@ -67,9 +71,12 @@ def test_chunk_parity(arch, chunk):
     ref_logits, ref_cache = lm_prefill(cfg, params, {"tokens": toks},
                                        init_lm_cache(cfg, B, MS))
     logits, cache = _run_chunked(cfg, params, toks, MS, chunk)
+    # bf16 logits: tolerance must sit above bf16 ULP (2^-8) — a few-ULP
+    # drift from reduction-order changes is expected; the bit-exact greedy
+    # continuation below is the strong parity gate
     np.testing.assert_allclose(np.asarray(logits, np.float32),
                                np.asarray(ref_logits, np.float32),
-                               rtol=2e-3, atol=2e-3)
+                               rtol=2e-2, atol=2e-2)
     np.testing.assert_array_equal(np.asarray(cache["pos"]),
                                   np.asarray(ref_cache["pos"]))
     first = jnp.argmax(ref_logits[..., :cfg.vocab_size], -1).astype(jnp.int32)
@@ -78,7 +85,12 @@ def test_chunk_parity(arch, chunk):
     np.testing.assert_array_equal(np.asarray(t_chk), np.asarray(t_ref))
 
 
-@pytest.mark.parametrize("arch", ["dense", "mamba2", "mamba1", "hybrid"])
+@pytest.mark.parametrize("arch", [
+    "dense", "mamba2",                                 # tier-1 smoke: flash
+                                                       # q_offset + scan/ssd
+    pytest.param("mamba1", marks=pytest.mark.slow),
+    pytest.param("hybrid", marks=pytest.mark.slow),
+])
 def test_chunk_parity_interpret_backend(arch):
     """The same parity through the Pallas kernels (interpret=True on CPU):
     exercises the flash q_offset path and initial-state scan/ssd/conv
@@ -92,14 +104,20 @@ def test_chunk_parity_interpret_backend(arch):
         ref_logits, ref_cache = lm_prefill(cfg, params, {"tokens": toks},
                                            init_lm_cache(cfg, B, MS))
         logits, cache = _run_chunked(cfg, params, toks, MS, chunk=5)
+    # bf16 logits: tolerance must sit above bf16 ULP (2^-8) — a few-ULP
+    # drift from reduction-order changes is expected
     np.testing.assert_allclose(np.asarray(logits, np.float32),
                                np.asarray(ref_logits, np.float32),
-                               rtol=2e-3, atol=2e-3)
+                               rtol=2e-2, atol=2e-2)
     np.testing.assert_array_equal(np.asarray(cache["pos"]),
                                   np.asarray(ref_cache["pos"]))
 
 
-@pytest.mark.parametrize("arch", ["dense", "mamba2", "mamba1", "hybrid"])
+@pytest.mark.parametrize("arch", [
+    "dense", "hybrid",                                 # tier-1 smoke
+    pytest.param("mamba1", marks=pytest.mark.slow),
+    pytest.param("mamba2", marks=pytest.mark.slow),
+])
 def test_mixed_length_batch_matches_solo(arch):
     """One padded heterogeneous batch (no same-length grouping): every
     row's logits and cache states must equal a batch-1 prefill of just
@@ -124,7 +142,7 @@ def test_mixed_length_batch_matches_solo(arch):
             init_lm_cache(cfg, 1, MS))
         np.testing.assert_allclose(np.asarray(logits[i], np.float32),
                                    np.asarray(solo_logits[0], np.float32),
-                                   rtol=2e-3, atol=2e-3)
+                                   rtol=2e-2, atol=2e-2)
         # decode continuation must agree token-for-token with the solo row
         first = jnp.argmax(solo_logits[..., :cfg.vocab_size],
                            -1).astype(jnp.int32)

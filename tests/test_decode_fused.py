@@ -43,7 +43,12 @@ def _cfgs():
     ]
 
 
-@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize("backend", [
+    "ref",
+    # interpret sweep: hybrid exercises every fused kernel in one config;
+    # the per-family interpret runs are the slow sweep (scripts/verify.sh)
+    pytest.param("interpret", marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("cfg", _cfgs(), ids=lambda c: c.name)
 def test_decode_tokens_matches_sequential(cfg, backend):
     """The fused lax.scan loop must reproduce the per-token python loop
@@ -78,6 +83,12 @@ def test_decode_tokens_matches_sequential(cfg, backend):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=1e-5, atol=1e-5)
+
+
+def test_decode_tokens_interpret_smoke():
+    """Thin tier-1 interpret-parity smoke: the hybrid config alone touches
+    every fused decode kernel (conv shift, SSM update, shared attention)."""
+    test_decode_tokens_matches_sequential(_cfgs()[3], "interpret")
 
 
 def test_decode_tokens_sampling_reproducible():

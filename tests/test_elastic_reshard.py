@@ -18,10 +18,10 @@ SCRIPT = textwrap.dedent("""
     from repro.checkpoint.ckpt import restore, save
 
     ckpt_dir = sys.argv[1]
-    mesh_a = jax.make_mesh((8,), ("model",),
-                           axis_types=(jax.sharding.AxisType.Auto,))
-    mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    at = getattr(jax.sharding, "AxisType", None)  # absent on older jax
+    kw = (lambda n: {"axis_types": (at.Auto,) * n}) if at else (lambda n: {})
+    mesh_a = jax.make_mesh((8,), ("model",), **kw(1))
+    mesh_b = jax.make_mesh((2, 4), ("data", "model"), **kw(2))
 
     # "train" on mesh A: params sharded 8-way on the last dim
     w = jnp.arange(16 * 64, dtype=jnp.float32).reshape(16, 64)

@@ -22,11 +22,13 @@ def _tol(dtype):
 
 
 # --------------------------------------------------------------------- SSD
+# the first two shapes are the tier-1 parity smoke; the larger sweep points
+# run under REPRO_RUN_SLOW=1 (scripts/verify.sh)
 @pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
     (1, 32, 2, 8, 1, 8, 8),
     (2, 64, 4, 16, 2, 16, 16),
-    (1, 128, 8, 64, 1, 32, 32),
-    (2, 96, 4, 32, 4, 64, 32),
+    pytest.param(1, 128, 8, 64, 1, 32, 32, marks=pytest.mark.slow),
+    pytest.param(2, 96, 4, 32, 4, 64, 32, marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_ssd_kernel(b, s, h, p, g, n, chunk, dtype):
@@ -67,8 +69,11 @@ def test_ssd_kernel_matches_sequential_oracle():
 
 
 # ------------------------------------------------------------------ conv1d
-@pytest.mark.parametrize("b,s,c,k", [(1, 64, 32, 4), (2, 128, 64, 4),
-                                     (1, 256, 128, 2)])
+@pytest.mark.parametrize("b,s,c,k", [
+    (1, 64, 32, 4),
+    pytest.param(2, 128, 64, 4, marks=pytest.mark.slow),
+    pytest.param(1, 256, 128, 2, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_conv1d_kernel(b, s, c, k, dtype):
     ks = jax.random.split(KEY, 4)
@@ -124,9 +129,14 @@ def test_flash_kernel_q_offset(dtype):
 
 
 # ------------------------------------------------------------ decode attn
-@pytest.mark.parametrize("b,h,kvh,s,d", [(2, 8, 4, 200, 32), (1, 4, 1, 64, 64),
-                                         (3, 12, 4, 300, 16)])
-def test_decode_kernel(b, h, kvh, s, d):
+@pytest.mark.parametrize("b,h,kvh,s,d", [
+    (2, 8, 4, 200, 32),
+    pytest.param(1, 4, 1, 64, 64, marks=pytest.mark.slow),
+    pytest.param(3, 12, 4, 300, 16, marks=pytest.mark.slow),
+])
+@pytest.mark.parametrize("split_k", [
+    1, 2, pytest.param(4, marks=pytest.mark.slow)])
+def test_decode_kernel(b, h, kvh, s, d, split_k):
     ks = jax.random.split(KEY, 3)
     q = jax.random.normal(ks[0], (b, h, d))
     k = jax.random.normal(ks[1], (b, kvh, s, d))
@@ -134,6 +144,26 @@ def test_decode_kernel(b, h, kvh, s, d):
     vl = jnp.asarray(np.random.default_rng(0).integers(1, s, b), jnp.int32)
     o_ref = decode_attention_ref(q, k, v, valid_len=vl)
     o_k = decode_attention_pallas(q, k, v, valid_len=vl, block_s=64,
-                                  interpret=True)
+                                  split_k=split_k, interpret=True)
     np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
                                rtol=2e-4, atol=2e-4)
+
+
+def test_decode_kernel_split_boundaries():
+    """valid_len landing exactly on block / split edges: the early-exit
+    predicate and the split-K combine must not read one row too many or
+    drop the newest row (empty splits must vanish from the softmax)."""
+    b, h, kvh, s, d = 2, 4, 2, 256, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, kvh, s, d))
+    v = jax.random.normal(ks[2], (b, kvh, s, d))
+    for edge in (1, 32, 33, 255, 256):
+        vl = jnp.asarray([edge, s - edge + 1], jnp.int32)
+        o_ref = decode_attention_ref(q, k, v, valid_len=vl)
+        for sk in (2, 8):
+            o_k = decode_attention_pallas(q, k, v, valid_len=vl, block_s=32,
+                                          split_k=sk, interpret=True)
+            np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                                       rtol=2e-4, atol=2e-4,
+                                       err_msg=f"edge={edge} split_k={sk}")

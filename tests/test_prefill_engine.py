@@ -1,13 +1,20 @@
 """Engine-level chunked-prefill regressions: interleaved prefill/decode
 (no head-of-line blocking), mixed-length admission without same-length
-grouping, preemption via host offload/restore, and the grouped fallback
-for rolling-window architectures."""
+grouping, preemption via host offload/restore (bucketed caches included),
+and the grouped fallback for rolling-window architectures (explicit,
+deterministic, with working preemption and correct cache sizing when
+window and max_seq disagree)."""
+import logging
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.config import AttnConfig, ModelConfig, SSMConfig
-from repro.models.lm import init_lm_params
+from repro.models.lm import (init_lm_cache, init_lm_params, lm_decode_step,
+                             lm_forward, lm_prefill)
 from repro.serving.engine import Request, ServingEngine, greedy_generate
 
 KEY = jax.random.PRNGKey(0)
@@ -38,10 +45,12 @@ def _solo(cfg, params, prompt, max_seq, n):
     return np.asarray(out[0])
 
 
+@pytest.mark.slow
 def test_mixed_length_chunked_admission_matches_solo():
     """Heterogeneous prompt lengths admitted as ONE padded prefill group
     (chunked, no same-length grouping) must decode exactly like solo
-    batch-1 runs."""
+    batch-1 runs.  Slow sweep: the head-of-line test below covers the
+    mixed-length interleave path in tier-1."""
     cfg = _hybrid_cfg()
     params = init_lm_params(cfg, KEY)
     rng = np.random.default_rng(3)
@@ -152,6 +161,106 @@ def test_submit_rejects_invalid_prompts():
         2, cfg.vocab_size, 9).astype(np.int32), max_new=4))
     done = eng.run()
     assert [r.rid for r in done] == [2] and len(done[0].out) == 4
+
+
+def test_fallback_is_logged_explicitly(caplog):
+    """The grouped one-shot fallback must announce itself (it silently
+    changes prefill latency characteristics) — once, at engine build."""
+    cfg = _local_cfg()
+    params = init_lm_params(cfg, KEY)
+    with caplog.at_level(logging.WARNING, logger="repro.serving.engine"):
+        eng = ServingEngine(cfg, params, slots=2, max_seq=48)
+    assert not eng.chunked and not eng.kv_buckets
+    msgs = [r.message for r in caplog.records
+            if "chunked prefill unsupported" in r.message]
+    assert len(msgs) == 1 and "local" in msgs[0]
+
+
+def test_grouped_fallback_preempts_on_starvation():
+    """The fallback path shares the starvation preemption contract: a
+    queued prompt behind a slot-hogging long decode must preempt it, and
+    the preempted request must resume bit-exactly (offload/restore of
+    rolling-window caches included)."""
+    cfg = _local_cfg()
+    params = init_lm_params(cfg, KEY)
+    rng = np.random.default_rng(2)
+    p_long = rng.integers(2, cfg.vocab_size, 11).astype(np.int32)
+    p_short = rng.integers(2, cfg.vocab_size, 7).astype(np.int32)
+    eng = ServingEngine(cfg, params, slots=1, max_seq=96, decode_block=2,
+                        preempt_after=2)
+    assert not eng.chunked
+    eng.submit(Request(rid=0, prompt=p_long, max_new=40))
+    eng.submit(Request(rid=1, prompt=p_short, max_new=6))
+    done = {r.rid: r for r in eng.run()}
+    assert eng.stats["preemptions"] >= 1
+    assert eng.stats["restores"] == eng.stats["preemptions"]
+    np.testing.assert_array_equal(np.asarray(done[0].out[:40]),
+                                  _solo(cfg, params, p_long, 96, 40))
+    np.testing.assert_array_equal(np.asarray(done[1].out[:6]),
+                                  _solo(cfg, params, p_short, 96, 6))
+
+
+def test_window_larger_than_max_seq_cache_sizing():
+    """Regression for the rolling-cache sizing bug: with window > max_seq,
+    ``init_attn_cache`` used to clamp the cache to max_seq rows while
+    keeping non-modular decode writes — every token past max_seq was
+    silently dropped and decode went stale.  The rolling cache must hold
+    the full window; prefill+decode must match teacher-forced full
+    forwards exactly."""
+    cfg = ModelConfig(name="locpure", family="dense", n_layers=2, d_model=64,
+                      d_ff=128, vocab_size=97,
+                      attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16,
+                                      sliding_window=16),
+                      layer_pattern=("local",), vocab_pad_multiple=16)
+    params = init_lm_params(cfg, KEY)
+    MS, plen, n = 12, 8, 7
+    cache = init_lm_cache(cfg, 1, MS)
+    kleaf = cache["segments"][0][0]["k"]
+    assert kleaf.shape[2] == 16, "rolling cache must span the full window"
+    fwd = jax.jit(partial(lm_forward, cfg, train=False))
+    prompt = np.random.default_rng(0).integers(2, cfg.vocab_size,
+                                               plen).astype(np.int32)
+    seq, gt = list(prompt), []
+    for _ in range(n):
+        lg = fwd(params, {"tokens": jnp.asarray(np.asarray(seq)[None])})
+        nxt = int(jnp.argmax(lg[0, -1, :cfg.vocab_size]))
+        gt.append(nxt)
+        seq.append(nxt)
+    lg, cache = jax.jit(partial(lm_prefill, cfg))(
+        params, {"tokens": jnp.asarray(prompt[None])}, cache)
+    out = [int(jnp.argmax(lg[0, -1, :cfg.vocab_size]))]
+    step = jax.jit(partial(lm_decode_step, cfg))
+    for _ in range(n - 1):
+        lg, cache = step(params, jnp.asarray([[out[-1]]], jnp.int32), cache)
+        out.append(int(jnp.argmax(lg[0, 0, :cfg.vocab_size])))
+    assert out == gt, f"stale decode past max_seq: {out} vs {gt}"
+
+
+def test_preemption_restore_across_buckets():
+    """Bucketed caches + preemption: a request evicted while the engine
+    decodes in one KV bucket must resume bit-exactly after the engine has
+    moved to a different (larger) bucket — the offload blob carries full
+    cache rows, not bucket-sliced ones."""
+    cfg = _hybrid_cfg()
+    params = init_lm_params(cfg, KEY)
+    rng = np.random.default_rng(5)
+    p_long = rng.integers(2, cfg.vocab_size, 11).astype(np.int32)
+    p_short = rng.integers(2, cfg.vocab_size, 7).astype(np.int32)
+    # max_seq 256 gives a two-rung ladder (128, 256); the long request is
+    # preempted early (bucket 128) and finishes deep in the 256 rung
+    eng = ServingEngine(cfg, params, slots=1, max_seq=256, decode_block=8,
+                        chunk_size=8, preempt_after=2)
+    assert eng.kv_buckets
+    eng.submit(Request(rid=0, prompt=p_long, max_new=140))
+    eng.submit(Request(rid=1, prompt=p_short, max_new=6))
+    done = {r.rid: r for r in eng.run()}
+    assert eng.stats["preemptions"] >= 1
+    assert done[0].preemptions >= 1
+    assert len(eng.buckets_used) >= 2, eng.buckets_used
+    np.testing.assert_array_equal(np.asarray(done[0].out[:140]),
+                                  _solo(cfg, params, p_long, 256, 140))
+    np.testing.assert_array_equal(np.asarray(done[1].out[:6]),
+                                  _solo(cfg, params, p_short, 256, 6))
 
 
 def test_max_new_respected_with_blocks():

@@ -7,6 +7,7 @@ running alone."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.config import AttnConfig, ModelConfig, SSMConfig
 from repro.models.lm import init_lm_params
@@ -25,11 +26,14 @@ def _cfg():
                        shared_attn_d_ff=128, vocab_pad_multiple=16)
 
 
+@pytest.mark.slow
 def test_late_admitted_slots_match_solo_decode():
     """5 requests through 2 slots: the last three are admitted mid-flight at
     positions different from the resident slots. Outputs must equal a
     batch-1 greedy_generate of the same prompt (the shared-pos engine
-    failed this for every late admission)."""
+    failed this for every late admission).  Slow sweep: the head-of-line
+    and preemption tests in test_prefill_engine keep per-slot-pos parity
+    covered in tier-1."""
     cfg = _cfg()
     params = init_lm_params(cfg, KEY)
     rng = np.random.default_rng(3)
