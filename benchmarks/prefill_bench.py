@@ -19,9 +19,16 @@ fraction of engine iterations that ran a prefill chunk alongside live
 decode slots in which decode actually emitted tokens (1.0 = no
 head-of-line blocking).
 
+Four config rows: ``transformer`` (dense GQA), ``ssm`` (mamba2),
+``hybrid`` (mamba2 + shared attention), and ``windowed_hybrid`` (rolling
+sliding-window attention + mamba2 — the ring-buffer chunked-prefill path,
+prompts many windows long).  All four run the SAME serving pipeline;
+there is no separate one-shot path for windowed architectures.
+
 Results append to ``BENCH_prefill.json`` at the repo root.  ``--smoke``
 runs the reduced sweep used by ``scripts/verify.sh`` and asserts
-  1. chunked peak-activation memory < one-shot at the 8K+ prompt,
+  1. chunked peak-activation memory < one-shot at the 8K+ prompt
+     (every row, the windowed one included),
   2. chunked TTFT <= TTFT_FACTOR x one-shot (regression bound), and
   3. fairness == 1.0 with all requests completing.
 
@@ -40,6 +47,7 @@ import numpy as np
 
 from repro.core.config import AttnConfig, ModelConfig, SSMConfig
 from repro.models.lm import init_lm_cache, init_lm_params
+from repro.serving.bucketing import rope_len_for
 from repro.serving.engine import Request, ServingEngine, make_prefill_step
 from repro.serving.prefill import _jitted_chunk_step, chunked_prefill
 
@@ -70,6 +78,17 @@ def bench_configs(d_model: int = 64):
                                            head_dim=d_model // 4,
                                            dense_cutoff=1024),
                     shared_attn_d_ff=2 * d_model, vocab_pad_multiple=16),
+        # windowed-hybrid: rolling sliding-window attention + SSM — the
+        # ring-buffer chunked-prefill path (prompts are far longer than
+        # the window, so every chunk wraps the ring)
+        ModelConfig(name="windowed_hybrid", family="hybrid", n_layers=4,
+                    d_model=d_model, d_ff=2 * d_model, vocab_size=256,
+                    attn=AttnConfig(n_heads=4, n_kv_heads=2,
+                                    head_dim=d_model // 4,
+                                    sliding_window=512, dense_cutoff=1024),
+                    ssm=SSMConfig(d_state=16, headdim=16, chunk=16),
+                    layer_pattern=("local", "mamba2"),
+                    vocab_pad_multiple=16),
     ]
 
 
@@ -96,7 +115,10 @@ def bench_prefill(cfg, plen: int, chunk: int, max_seq: int,
     chunk_step = _jitted_chunk_step(cfg, None)
     ctoks = jnp.zeros((1, chunk), jnp.int32)
     clens = jnp.zeros((1,), jnp.int32)
-    chunk_c = chunk_step.lower(params, ctoks, clens, template).compile()
+    # rolling (ring-buffer) caches span only their window: size the rope
+    # tables to the serving extent, exactly like ChunkedPrefill does
+    chunk_c = chunk_step.lower(params, ctoks, clens, template,
+                               rope_len=rope_len_for(cfg, max_seq)).compile()
     mem_chk = _temp_bytes(chunk_c)
 
     def run_oneshot():

@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""Docs freshness gate: fail when docs reference code that no longer exists.
+
+Scans every ``docs/*.md`` (plus ``benchmarks/README.md``) for
+
+  * repo paths — ``src/repro/...``, ``scripts/...``, ``benchmarks/...``,
+    ``tests/...`` — and fails if the file or directory is gone;
+  * ``REPRO_*`` environment variables, and fails if the variable is no
+    longer read anywhere under ``src/`` or ``scripts/``;
+  * ``BENCH_*.json`` trajectory records, and fails if the file is gone.
+
+This keeps the docs subsystem from rotting silently: renaming a module,
+deleting an env var, or retiring a trajectory breaks verify.sh until the
+docs are updated.  References may carry a ``:symbol`` suffix
+(``src/repro/models/lm.py:lm_prefill_chunk``) — only the path part is
+checked.
+
+  python scripts/check_docs.py          # exits 1 with a report on stale refs
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(ROOT.glob("docs/*.md")) + [ROOT / "benchmarks" / "README.md"]
+
+PATH_RE = re.compile(
+    r"\b((?:src/repro|scripts|benchmarks|tests|docs)/[A-Za-z0-9_./-]+)")
+ENV_RE = re.compile(r"\b(REPRO_[A-Z0-9_]+)\b")
+BENCH_RE = re.compile(r"\b(BENCH_[A-Za-z0-9_]+\.json)\b")
+
+
+def _env_vars_in_tree() -> set:
+    # src/ and scripts/ only, matching the failure message: a stale
+    # mention in a test or benchmark comment must not keep a deleted
+    # runtime variable "documented"
+    found = set()
+    for base in ("src", "scripts"):
+        for f in (ROOT / base).rglob("*"):
+            if f.suffix in (".py", ".sh") and f.is_file():
+                found.update(ENV_RE.findall(f.read_text(errors="ignore")))
+    return found
+
+
+def main() -> int:
+    if not DOC_FILES:
+        print("check_docs: no docs/*.md found", file=sys.stderr)
+        return 1
+    tree_envs = _env_vars_in_tree()
+    stale = []
+    checked_paths = checked_envs = 0
+    for doc in DOC_FILES:
+        if not doc.exists():
+            continue
+        text = doc.read_text()
+        rel = doc.relative_to(ROOT)
+        for m in PATH_RE.finditer(text):
+            # strip trailing punctuation the prose may attach, and any
+            # :symbol suffix
+            path = m.group(1).rstrip(".,;:)`'\"").split(":")[0]
+            checked_paths += 1
+            if not (ROOT / path).exists():
+                stale.append(f"{rel}: path `{path}` does not exist")
+        for var in set(ENV_RE.findall(text)):
+            checked_envs += 1
+            if var == "REPRO_":                     # prose artifact guard
+                continue
+            if var not in tree_envs:
+                stale.append(
+                    f"{rel}: env var `{var}` is not read anywhere under "
+                    "src/ or scripts/")
+        for rec in set(BENCH_RE.findall(text)):
+            if not (ROOT / rec).exists():
+                stale.append(f"{rel}: trajectory record `{rec}` is missing")
+    if stale:
+        print("check_docs FAILED — stale references:", file=sys.stderr)
+        for s in stale:
+            print(f"  {s}", file=sys.stderr)
+        return 1
+    print(f"check_docs OK: {len(DOC_FILES)} docs, {checked_paths} path refs, "
+          f"{checked_envs} env refs verified")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,16 +1,18 @@
 #!/usr/bin/env bash
-# Tier-1 gate + decode/prefill/attn perf smokes in one command:
+# Tier-1 gate + decode/prefill/attn perf smokes + docs check in one command:
 #   bash scripts/verify.sh
 # Runs the tier-1 pytest command WITH the slow kernel-parity sweeps
 # (REPRO_RUN_SLOW=1 — tier-1 alone keeps only the thin parity smokes to
 # stay inside the CI container's 5-minute budget), then the decode perf
 # smoke (fused loop >= 2x the per-token loop), the prefill smoke (chunked
-# peak-activation memory < one-shot at 8K+ prompts, TTFT regression bound,
-# interleaving fairness 1.0), and the attention smoke (per-chunk attention
+# peak-activation memory < one-shot at 8K+ prompts for every config row —
+# the windowed ring-buffer row included — TTFT regression bound,
+# interleaving fairness 1.0), the attention smoke (per-chunk attention
 # time tracks the live prefix under KV bucketing, flash-decode parity,
-# chunked-prefill parity), and fails if any failed (the smokes still run
-# when pre-existing tests fail, so the perf trajectories are always
-# recorded).
+# chunked-prefill parity), and the docs freshness check (paths / REPRO_*
+# vars named in docs/*.md must exist — see docs/CONFIGURATION.md for the
+# thresholds), and fails if any failed (the smokes still run when
+# pre-existing tests fail, so the perf trajectories are always recorded).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -28,5 +30,8 @@ prefill=$?
 python benchmarks/attn_bench.py --smoke
 attn=$?
 
-echo "tier1=$tier1 decode_smoke=$smoke prefill_smoke=$prefill attn_smoke=$attn"
-exit $(( tier1 || smoke || prefill || attn ))
+python scripts/check_docs.py
+docs=$?
+
+echo "tier1=$tier1 decode_smoke=$smoke prefill_smoke=$prefill attn_smoke=$attn docs_check=$docs"
+exit $(( tier1 || smoke || prefill || attn || docs ))

@@ -40,6 +40,30 @@ def decode_split_k():
     return val if val >= 1 else None
 
 
+def _env_flag(name: str, default: bool = True) -> bool:
+    env = os.environ.get(name)
+    if env is None or env.strip() == "":
+        return default
+    return env.strip().lower() not in ("0", "false", "no", "off")
+
+
+def prefill_kv_buckets() -> bool:
+    """``REPRO_PREFILL_KV_BUCKETS`` (default on): KV bucketing of chunked
+    prefill.  Off = every chunk attends the full-extent cache — a debug
+    escape hatch for bucket-related miscompares (outputs are bit-identical
+    either way; only FLOPs/IO and compile counts change)."""
+    return _env_flag("REPRO_PREFILL_KV_BUCKETS")
+
+
+def ring_buckets() -> bool:
+    """``REPRO_RING_BUCKETS`` (default on): allow bucket-slicing rolling
+    (ring-buffer) KV caches while their live prefix hasn't wrapped.  Off =
+    ring caches always span the full window inside bucketed programs (the
+    append-only leaves still slice) — safe either way, useful to isolate
+    ring-slice interactions."""
+    return _env_flag("REPRO_RING_BUCKETS")
+
+
 def default_backend() -> str:
     env = os.environ.get("REPRO_KERNEL_BACKEND")
     if env:

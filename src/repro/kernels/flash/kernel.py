@@ -12,6 +12,18 @@ short-prefix row in a mixed-length group never reads the long row's KV
 blocks, and rows read at most their own live prefix even before the
 serving layer slices the cache to the bucket.  The bucket (static ``Skv``)
 then bounds what is *resident*, the skip bounds what is *touched*.
+
+Ring-buffer contract (chunked prefill over rolling sliding-window caches):
+with the static ``ring_len`` set, the first ``ring_len`` KV slots are a
+ring with modulus ``window`` and per-row write cursor ``kv_wrap[b]``
+(a second SMEM scalar riding next to ``q_offset``); the remaining slots
+are the in-flight chunk at absolute positions ``kv_wrap[b] + (j -
+ring_len)``.  The kernel recovers each slot's absolute position with the
+modular formula and masks causally against it — the ring is unrolled
+in-mask, never materialized as a rolled copy.  Block-skip: chunk-tail
+coverage keeps the causal skip on its absolute positions; ring coverage
+runs unless it lies entirely past an unwrapped cursor (slot order is not
+position order, so no other ring skip is sound).
 """
 from __future__ import annotations
 
@@ -29,9 +41,11 @@ from repro.kernels.dispatch import tpu_compiler_params
 NEG_INF = -1e30
 
 
-def _flash_kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+def _flash_kernel(qoff_ref, kvwrap_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_s, l_s, acc_s, *,
                   bq: int, bk: int, nk: int, causal: bool,
-                  window: Optional[int], scale: float, kv_len: int):
+                  window: Optional[int], scale: float, kv_len: int,
+                  ring_len: Optional[int]):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -47,10 +61,26 @@ def _flash_kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
     # block-level skip: k block entirely in the future (causal) or entirely
     # out of the attention window
     run = True
-    if causal:
-        run = k_start <= q_start + bq - 1
-    if window is not None:
-        run = jnp.logical_and(run, (q_start - (k_start + bk - 1)) < window)
+    if ring_len is None:
+        if causal:
+            run = k_start <= q_start + bq - 1
+        if window is not None:
+            run = jnp.logical_and(run, (q_start - (k_start + bk - 1)) < window)
+    else:
+        # ring slots run only if any was ever written: slot order !=
+        # position order, but an unwrapped ring (wrap < window) has
+        # written exactly slots [0, wrap), so ring coverage fully past
+        # the cursor is dead.  Chunk-tail coverage keeps the causal skip
+        # on its absolute positions.  A block may span both regions —
+        # either live half forces it to run.
+        wrap = kvwrap_ref[0]
+        ring_live = jnp.logical_and(
+            k_start < ring_len,
+            jnp.logical_or(wrap >= window, k_start < wrap))
+        tail_first = wrap + jnp.maximum(k_start - ring_len, 0)
+        tail_live = jnp.logical_and(k_start + bk > ring_len,
+                                    tail_first <= q_start + bq - 1)
+        run = jnp.logical_or(ring_live, tail_live)
 
     @pl.when(run)
     def _():
@@ -59,8 +89,17 @@ def _flash_kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
         v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
         s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        mask = kpos < kv_len
+        jidx = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        if ring_len is None:
+            kpos = jidx
+            mask = jidx < kv_len
+        else:
+            wrap = kvwrap_ref[0]
+            ring_pos = wrap - 1 - jnp.mod(wrap - 1 - jidx, window)
+            tail_pos = wrap + (jidx - ring_len)
+            kpos = jnp.where(jidx < ring_len, ring_pos, tail_pos)
+            # kpos < 0 marks never-written ring slots
+            mask = (jidx < kv_len) & (kpos >= 0)
         if causal:
             mask &= qpos >= kpos
         if window is not None:
@@ -85,6 +124,7 @@ def _flash_kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
 def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            window: Optional[int] = None,
                            q_offset=None,
+                           kv_wrap=None, ring_len: Optional[int] = None,
                            block_q: int = 512, block_k: int = 512,
                            interpret: bool = False) -> jax.Array:
     """q: [B, H, Sq, d]; k, v: [B, KVH, Skv, d] -> [B, H, Sq, d].
@@ -93,13 +133,23 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
     per batch row: query i of row b sits at absolute position
     ``q_offset[b] + i`` (chunked prefill against a KV cache that already
     holds earlier chunks).  The offsets ride in SMEM; the block-skip
-    predicate folds them in, so fully-masked KV blocks are still skipped."""
+    predicate folds them in, so fully-masked KV blocks are still skipped.
+
+    ``kv_wrap`` ([B] int32 write cursors) + static ``ring_len`` switch the
+    first ``ring_len`` KV slots into a ring buffer with modulus ``window``
+    (see module docstring) — the layout used when a chunk prefills against
+    a rolling sliding-window cache."""
     b, h, sq, d = q.shape
     kvh, skv = k.shape[1], k.shape[2]
+    if ring_len is not None:
+        assert causal and window is not None and kv_wrap is not None, \
+            "ring KV layout requires causal attention, a window and kv_wrap"
     if q_offset is None:
         q_offset = 0
     qoff = jnp.broadcast_to(jnp.atleast_1d(
         jnp.asarray(q_offset, jnp.int32)), (b,))
+    kwrap = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(
+        0 if kv_wrap is None else kv_wrap, jnp.int32)), (b,))
     bq = min(block_q, sq)
     bk = min(block_k, skv)
     pad_q = (-sq) % bq
@@ -115,11 +165,13 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
     gsz = h // kvh
     kern = functools.partial(
         _flash_kernel, bq=bq, bk=bk, nk=nk, causal=causal, window=window,
-        scale=1.0 / math.sqrt(d), kv_len=kv_len)
+        scale=1.0 / math.sqrt(d), kv_len=kv_len, ring_len=ring_len)
     out = pl.pallas_call(
         kern,
         grid=(b, h, nq, nk),
         in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, qi, ki: (bi,),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((1,), lambda bi, hi, qi, ki: (bi,),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
@@ -140,5 +192,5 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(qoff, q, k, v)
+    )(qoff, kwrap, q, k, v)
     return out[:, :, :sq] if pad_q else out

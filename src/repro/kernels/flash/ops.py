@@ -11,9 +11,17 @@ from repro.kernels.flash import ref as _ref
 
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
-                    q_offset=None) -> jax.Array:
+                    q_offset=None,
+                    kv_wrap=None,
+                    ring_len: Optional[int] = None) -> jax.Array:
     """``q_offset`` (None, scalar, or [B] int32): per-row query-position
     offset for chunked prefill against an already-filled KV prefix.
+
+    ``kv_wrap`` ([B] int32) + static ``ring_len``: ring-buffer KV layout
+    for chunked prefill over rolling sliding-window caches — the first
+    ``ring_len`` KV slots are a ring with modulus ``window`` and per-row
+    write cursor ``kv_wrap``, the rest are the in-flight chunk (see
+    ``repro.kernels.flash.ref.ring_kv_positions``).
 
     Callers bound ``Skv`` to the live prefix via KV bucketing
     (``repro.serving.bucketing``); inside the kernel the per-row causal
@@ -23,8 +31,10 @@ def flash_attention(q, k, v, *, causal: bool = True,
         if backend == "ref":
             return _ref.attention_ref(q, k, v, causal=causal, window=window,
                                       q_offset=0 if q_offset is None
-                                      else q_offset)
+                                      else q_offset,
+                                      kv_wrap=kv_wrap, ring_len=ring_len)
         from repro.kernels.flash.kernel import flash_attention_pallas
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                       q_offset=q_offset,
+                                      kv_wrap=kv_wrap, ring_len=ring_len,
                                       interpret=(backend == "interpret"))

@@ -1,6 +1,15 @@
 """Pure-jnp oracle for flash attention: exact masked softmax attention.
 
 Layout: q [B, H, Sq, d]; k, v [B, KVH, Skv, d] (GQA: H % KVH == 0).
+
+Ring-buffer layout (chunked prefill over rolling sliding-window caches):
+when ``kv_wrap`` is given, the first ``ring_len`` KV slots are a ring
+buffer with modulus ``window`` whose per-row write cursor is ``kv_wrap``
+(slot j holds the most recent token with absolute position % window == j
+written before the chunk), and the remaining slots are the in-flight
+chunk at absolute positions ``kv_wrap + (j - ring_len)``.  The masks are
+evaluated against those absolute positions, so the ring is "unrolled"
+without ever materializing a rolled copy of the cache.
 """
 from __future__ import annotations
 
@@ -11,25 +20,54 @@ import jax
 import jax.numpy as jnp
 
 
+def ring_kv_positions(kv_wrap: jax.Array, window: int, ring_len: int,
+                      skv: int) -> jax.Array:
+    """Absolute key positions [B, Skv] of a ring+chunk KV layout.
+
+    ``kv_wrap`` ([B] int32): per-row write cursor (tokens written so far).
+    Slots ``j < ring_len`` are ring slots: the newest token with
+    ``pos % window == j`` strictly before the cursor (negative = never
+    written — callers must mask those out).  Slots ``j >= ring_len`` are
+    the current chunk: absolute position ``kv_wrap + (j - ring_len)``.
+    """
+    j = jnp.arange(skv, dtype=jnp.int32)[None, :]
+    w = jnp.asarray(kv_wrap, jnp.int32)[:, None]
+    ring = w - 1 - jnp.mod(w - 1 - j, window)
+    tail = w + (j - ring_len)
+    return jnp.where(j < ring_len, ring, tail)
+
+
 def attention_ref(q, k, v, *, causal: bool = True,
                   window: Optional[int] = None,
-                  q_offset=0) -> jax.Array:
+                  q_offset=0,
+                  kv_wrap: Optional[jax.Array] = None,
+                  ring_len: Optional[int] = None) -> jax.Array:
     """``q_offset``: scalar or [B] per-row query-position offset (chunked
-    prefill: query i of row b sits at absolute position q_offset[b] + i)."""
+    prefill: query i of row b sits at absolute position q_offset[b] + i).
+
+    ``kv_wrap``/``ring_len`` enable the ring-buffer KV layout (see module
+    docstring); they require ``causal`` and a ``window``."""
     b, h, sq, d = q.shape
     kvh = k.shape[1]
+    skv = k.shape[2]
     qg = q.reshape(b, kvh, h // kvh, sq, d)
     scale = 1.0 / math.sqrt(d)
     s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     off = jnp.atleast_1d(jnp.asarray(q_offset))
     qpos = jnp.arange(sq)[None, :] + off[:, None]              # [Bb, Sq]
-    kpos = jnp.arange(k.shape[2])[None, None, :]
-    mask = jnp.ones((off.shape[0], sq, k.shape[2]), bool)
+    if kv_wrap is not None:
+        assert causal and window is not None and ring_len is not None, \
+            "ring KV layout requires causal attention and a window"
+        kpos = ring_kv_positions(kv_wrap, window, ring_len, skv)[:, None, :]
+        mask = kpos >= 0                                       # never-written
+    else:
+        kpos = jnp.arange(skv)[None, None, :]
+        mask = jnp.ones((off.shape[0], sq, skv), bool)
     if causal:
-        mask &= qpos[:, :, None] >= kpos
+        mask = mask & (qpos[:, :, None] >= kpos)
     if window is not None:
-        mask &= (qpos[:, :, None] - kpos) < window
+        mask = mask & ((qpos[:, :, None] - kpos) < window)
     s = jnp.where(mask[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))

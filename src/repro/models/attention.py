@@ -4,6 +4,14 @@ All variants are written with *global* array semantics; GSPMD partitions them
 according to the activation sharding constraints installed by the step
 builder (see distributed/sharding.py).  The chunked path mirrors the Pallas
 flash kernel (kernels/flash) and is the lowering used for the CPU dry-run.
+
+Rolling sliding-window ("local") caches are ring buffers of exactly
+``window`` slots — slot i holds the newest token with ``pos % window ==
+i``.  Decode writes modularly; chunked prefill attends ``[ring | chunk]``
+with a per-row ``kv_wrap`` cursor that lets the kernels unroll the ring
+in-mask (no rolled copy), then folds the chunk back into the ring with a
+deterministic gather.  Every architecture therefore prefills through the
+same chunked serving path.
 """
 from __future__ import annotations
 
@@ -16,6 +24,7 @@ import jax.numpy as jnp
 from repro.core.config import AttnConfig
 from repro.distributed.sharding import constrain
 from repro.kernels import dispatch as kdispatch
+from repro.kernels.flash.ref import ring_kv_positions
 from repro.models.params import ParamDef
 from repro.models.norms import head_rms_norm
 from repro.models.rope import apply_rope
@@ -25,12 +34,20 @@ NEG_INF = -1e30
 
 def _full_seq_attn(q, k, v, a: AttnConfig, *, causal: bool,
                    window: Optional[int],
-                   q_offset: Optional[jax.Array] = None) -> jax.Array:
+                   q_offset: Optional[jax.Array] = None,
+                   kv_wrap: Optional[jax.Array] = None,
+                   ring_len: Optional[int] = None) -> jax.Array:
     """Dispatch the full-sequence core. q: [B,Sq,KV,G,hd]; k,v: [B,Skv,KV,hd].
 
     ``q_offset`` ([B] int32, or None) shifts the causal mask for chunked
     prefill: query i of row b sits at absolute position q_offset[b] + i
-    while keys cover absolute positions [0, Skv)."""
+    while keys cover absolute positions [0, Skv).
+
+    ``kv_wrap`` ([B] int32) + static ``ring_len`` switch the first
+    ``ring_len`` key slots into a ring buffer with modulus ``window`` and
+    per-row write cursor ``kv_wrap`` (slots past ``ring_len`` are the
+    in-flight chunk at ``kv_wrap + j - ring_len``) — the layout of a
+    chunked prefill over a rolling sliding-window cache."""
     if kdispatch.get_backend() != "ref":
         from repro.kernels.flash.ops import flash_attention
         b, sq, nkv, g, hd = q.shape
@@ -38,17 +55,21 @@ def _full_seq_attn(q, k, v, a: AttnConfig, *, causal: bool,
         kh = k.transpose(0, 2, 1, 3)
         vh = v.transpose(0, 2, 1, 3)
         o = flash_attention(qh, kh, vh, causal=causal, window=window,
-                            q_offset=q_offset)
+                            q_offset=q_offset, kv_wrap=kv_wrap,
+                            ring_len=ring_len)
         return o.transpose(0, 2, 1, 3).reshape(b, sq, nkv, g, hd)
-    if (q_offset is None and window is not None and causal
+    kv_pos = None
+    if kv_wrap is not None:
+        kv_pos = ring_kv_positions(kv_wrap, window, ring_len, k.shape[1])
+    if (q_offset is None and kv_pos is None and window is not None and causal
             and k.shape[1] > 2 * window):
         return _local_banded_attention(q, k, v, window=window)
     off = 0 if q_offset is None else q_offset
     if k.shape[1] <= a.dense_cutoff or a.impl == "dense":
         return _dense_attention(q, k, v, causal=causal, window=window,
-                                q_offset=off)
+                                q_offset=off, kv_pos=kv_pos)
     return _chunked_attention(q, k, v, causal=causal, window=window,
-                              q_offset=off)
+                              q_offset=off, kv_pos=kv_pos)
 
 
 def attn_param_defs(d_model: int, a: AttnConfig) -> Dict[str, ParamDef]:
@@ -81,9 +102,12 @@ def _group_q(q: jax.Array, n_kv: int) -> jax.Array:
 
 
 def _dense_attention(q, k, v, *, causal: bool, window: Optional[int],
-                     q_offset=0) -> jax.Array:
+                     q_offset=0, kv_pos=None) -> jax.Array:
     """q: [B,Sq,KV,G,hd]; k,v: [B,Skv,KV,hd]. Returns [B,Sq,KV,G,hd].
-    ``q_offset``: scalar or [B] per-row query-position offset."""
+    ``q_offset``: scalar or [B] per-row query-position offset.
+    ``kv_pos`` ([B, Skv] int32, or None for ``arange``): per-slot absolute
+    key positions (negative = never written, masked out) — the ring-buffer
+    KV layout of a chunked prefill over a rolling window."""
     with jax.named_scope("attn_core"):
         scale = 1.0 / math.sqrt(q.shape[-1])
         scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
@@ -91,21 +115,29 @@ def _dense_attention(q, k, v, *, causal: bool, window: Optional[int],
         sq, skv = q.shape[1], k.shape[1]
         off = jnp.atleast_1d(jnp.asarray(q_offset))
         qpos = jnp.arange(sq)[None, :] + off[:, None]          # [Bb, Sq]
-        kpos = jnp.arange(skv)[None, None, :]
-        mask = jnp.ones((off.shape[0], sq, skv), bool)
+        if kv_pos is not None:
+            kpos = kv_pos[:, None, :]                          # [B, 1, Skv]
+            mask = jnp.broadcast_to(kpos >= 0,
+                                    (kv_pos.shape[0], sq, skv))
+        else:
+            kpos = jnp.arange(skv)[None, None, :]
+            mask = jnp.ones((off.shape[0], sq, skv), bool)
         if causal:
-            mask &= qpos[:, :, None] >= kpos
+            mask = mask & (qpos[:, :, None] >= kpos)
         if window is not None:
-            mask &= (qpos[:, :, None] - kpos) < window
+            mask = mask & ((qpos[:, :, None] - kpos) < window)
         scores = jnp.where(mask[:, None, None], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
         return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
 
 
 def _chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
-                       kv_block: int = 1024, q_offset=0) -> jax.Array:
+                       kv_block: int = 1024, q_offset=0,
+                       kv_pos=None) -> jax.Array:
     """Online-softmax over kv blocks (flash-style, numerically exact).
-    ``q_offset``: scalar or [B] per-row query-position offset."""
+    ``q_offset``: scalar or [B] per-row query-position offset.
+    ``kv_pos`` ([B, Skv] int32, or None for ``arange``): per-slot absolute
+    key positions (negative = masked), for ring-buffer KV layouts."""
     b, sq, nkv, g, hd = q.shape
     skv = k.shape[1]
     nb = -(-skv // kv_block)
@@ -115,23 +147,29 @@ def _chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     kb = k.reshape(b, nb, kv_block, nkv, hd).transpose(1, 0, 2, 3, 4)
     vb = v.reshape(b, nb, kv_block, nkv, hd).transpose(1, 0, 2, 3, 4)
+    # key positions per slot (-1 on the padded tail so it masks out); the
+    # default arange collapses to the classic in-order layout
+    if kv_pos is None:
+        kv_pos = jnp.arange(skv, dtype=jnp.int32)[None, :]
+    kp = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    kpb = kp.reshape(kp.shape[0], nb, kv_block).transpose(1, 0, 2)
     scale = 1.0 / math.sqrt(hd)
     off = jnp.atleast_1d(jnp.asarray(q_offset))
     qpos = jnp.arange(sq)[None, :] + off[:, None]              # [Bb, Sq]
+    nrow = max(off.shape[0], kp.shape[0])
 
     def body(carry, blk):
         m, l, acc = carry
-        kblk, vblk, bidx = blk
+        kblk, vblk, kpos = blk
         with jax.named_scope("attn_core"):
             s = jnp.einsum("bqkgd,bskd->bkgqs", q, kblk,
                            preferred_element_type=jnp.float32) * scale
-            kpos = bidx * kv_block + jnp.arange(kv_block)
-            mask = jnp.broadcast_to(kpos[None, None, :] < skv,
-                                    (off.shape[0], sq, kv_block))
+            mask = jnp.broadcast_to(kpos[:, None, :] >= 0,
+                                    (nrow, sq, kv_block))
             if causal:
-                mask &= qpos[:, :, None] >= kpos[None, None, :]
+                mask = mask & (qpos[:, :, None] >= kpos[:, None, :])
             if window is not None:
-                mask &= (qpos[:, :, None] - kpos[None, None, :]) < window
+                mask = mask & ((qpos[:, :, None] - kpos[:, None, :]) < window)
             s = jnp.where(mask[:, None, None], s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
@@ -144,8 +182,7 @@ def _chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
     m0 = jnp.full((b, nkv, g, sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, nkv, g, sq), jnp.float32)
     acc0 = jnp.zeros((b, sq, nkv, g, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0),
-                                  (kb, vb, jnp.arange(nb)))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kb, vb, kpb))
     out = acc / jnp.maximum(l, 1e-37).transpose(0, 3, 1, 2)[..., None]
     return out.astype(q.dtype)
 
@@ -192,12 +229,18 @@ def attention(p: Dict, x: jax.Array, a: AttnConfig, *,
               cache: Optional[Dict] = None,
               pos: Optional[jax.Array] = None,
               kv_repeat: int = 1,
+              chunk_mask: Optional[jax.Array] = None,
               eps: float = 1e-6) -> Tuple[jax.Array, Optional[Dict]]:
     """Full attention sub-block: qkv proj -> rope -> core -> out proj.
 
     cache=None: full-sequence (train/prefill, no cache returned).
     cache dict with "k","v" [B,Skv,KV*rep,hd]: if x has S>1 it is a prefill
     that fills the cache; if S==1 it is a decode step at position ``pos``.
+
+    ``chunk_mask`` ([B, S] bool, chunked prefill only) marks the valid
+    prefix of the chunk per row; rolling (ring-buffer) caches use it to
+    gate their writes — an invalid token must never overwrite live ring
+    history (append-only caches just let later writes/masks hide it).
     """
     b, s, _ = x.shape
     with jax.named_scope("qkv_proj"):
@@ -240,6 +283,46 @@ def attention(p: Dict, x: jax.Array, a: AttnConfig, *,
     new_cache = None
     if cache is None:
         o = _full_seq_attn(q, kr, vr, a, causal=a.causal, window=window)
+    elif (s > 1 and pos is not None and window is not None
+          and cache["k"].shape[1] <= window):
+        # ring-buffer chunked prefill over a rolling sliding-window cache:
+        # attend the chunk against [ring | chunk] with the modular mask
+        # (the kernels unroll the ring via kv_wrap — no rolled copy), then
+        # fold the chunk's last min(len, window) valid tokens back into the
+        # ring at slot (pos + i) % window.  ``ring_len`` may be < window
+        # when the serving layer bucket-sliced a not-yet-wrapped ring.
+        ring_len = cache["k"].shape[1]
+        posv = jnp.broadcast_to(jnp.atleast_1d(pos), (b,)).astype(jnp.int32)
+        if chunk_mask is not None:
+            chunk_len = jnp.sum(chunk_mask, axis=1).astype(jnp.int32)
+        else:
+            chunk_len = jnp.full((b,), s, jnp.int32)
+        kcat = jnp.concatenate([cache["k"].astype(k.dtype), k], axis=1)
+        vcat = jnp.concatenate([cache["v"].astype(v.dtype), v], axis=1)
+        kcr = constrain(_repeat_kv(kcat, kv_repeat),
+                        ("batch", "kv_seq", "kv_heads", None))
+        vcr = constrain(_repeat_kv(vcat, kv_repeat),
+                        ("batch", "kv_seq", "kv_heads", None))
+        o = _full_seq_attn(q, kcr, vcr, a, causal=a.causal, window=window,
+                           q_offset=posv, kv_wrap=posv, ring_len=ring_len)
+        # ring write as a gather: slot j takes the LAST valid chunk token
+        # with (pos + i) % window == j, or keeps its old row.  (A scatter
+        # would rely on XLA's unspecified duplicate-index ordering when
+        # chunk > window; the gather is deterministic by construction.)
+        slot = jnp.arange(ring_len, dtype=jnp.int32)
+
+        def _ring_write(ring, upd, p, ln):
+            t = jnp.mod(p + ln - 1 - slot, window)
+            i = ln - 1 - t                       # largest valid source idx
+            src = jnp.take(upd, jnp.clip(i, 0, s - 1), axis=0)
+            return jnp.where((i >= 0)[:, None, None],
+                             src.astype(ring.dtype), ring)
+
+        kc = constrain(jax.vmap(_ring_write)(cache["k"], k, posv, chunk_len),
+                       ("batch", "kv_seq", "kv_heads", None))
+        vc = constrain(jax.vmap(_ring_write)(cache["v"], v, posv, chunk_len),
+                       ("batch", "kv_seq", "kv_heads", None))
+        new_cache = {"k": kc, "v": vc}
     elif s > 1 and pos is not None:
         # chunked prefill: scatter this chunk's kv at each row's running
         # offset, then attend over the whole cache with the offset causal
@@ -247,10 +330,6 @@ def attention(p: Dict, x: jax.Array, a: AttnConfig, *,
         # valid length hold garbage that the next chunk overwrites or the
         # decode-time valid_len mask hides.
         skv = cache["k"].shape[1]
-        if window is not None and skv <= window:
-            raise NotImplementedError(
-                "chunked prefill needs a full-length KV cache; rolling "
-                "sliding-window caches only support one-shot prefill")
         posv = jnp.broadcast_to(jnp.atleast_1d(pos), (b,)).astype(jnp.int32)
         idx = posv[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
 

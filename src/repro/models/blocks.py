@@ -122,7 +122,7 @@ def apply_layer(cfg: ModelConfig, kind: str, p: Dict, x: jax.Array, *,
         a_out, new_attn_cache = attention(
             p["attn"], h, cfg.attn, rope=rt, window=window,
             cache=attn_cache if kind != "encoder" else None,
-            pos=pos, kv_repeat=kv_repeat, eps=eps)
+            pos=pos, kv_repeat=kv_repeat, chunk_mask=chunk_mask, eps=eps)
         x = x + a_out
         h = rms_norm(x, p["ln2"], eps)
         if kind == "moe":
@@ -140,7 +140,8 @@ def apply_layer(cfg: ModelConfig, kind: str, p: Dict, x: jax.Array, *,
                       if cache is not None else None)
         a_out, new_attn = attention(p["attn"], h, cfg.attn, rope=rope,
                                     cache=attn_cache, pos=pos,
-                                    kv_repeat=kv_repeat, eps=eps)
+                                    kv_repeat=kv_repeat,
+                                    chunk_mask=chunk_mask, eps=eps)
         mcache = ({"conv": cache["conv"], "ssm": cache["ssm"]}
                   if cache is not None else None)
         is_decode = cache is not None and x.shape[1] == 1 and pos is not None
@@ -182,7 +183,8 @@ def apply_layer(cfg: ModelConfig, kind: str, p: Dict, x: jax.Array, *,
             a_out, new_shared_cache = attention(
                 shared["attn"], h, cfg.shared_attn, rope=rope,
                 cache=cache["attn"] if cache is not None else None,
-                pos=pos, kv_repeat=shared_kv_repeat, eps=eps)
+                pos=pos, kv_repeat=shared_kv_repeat,
+                chunk_mask=chunk_mask, eps=eps)
             x = x + a_out
             h = rms_norm(x, shared["ln2"], eps)
             x = x + mlp(shared["mlp"], h, cfg.act)

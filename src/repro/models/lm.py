@@ -33,7 +33,12 @@ kernels in ``repro.kernels.decode_fused`` (backend selected by
 ``kv_bucket``: the KV caches are sliced to that extent around the compiled
 body so attention FLOPs/IO track the live prefix instead of ``max_seq``
 (bit-identical outputs; see ``repro.serving.bucketing`` for how callers
-pick the bucket from a bounded power-of-two ladder)."""
+pick the bucket from a bounded power-of-two ladder whose top rung is the
+model's largest KV extent — the sliding *window* for rolling
+architectures).  Rolling ("local") layers chunk-prefill through their
+ring-buffer caches (modular scatter + ring-unrolling mask in
+``repro.models.attention``); both entry points take a static ``rope_len``
+so rope tables cover positions past a window-sized cache."""
 from __future__ import annotations
 
 from typing import Any, Dict, Optional, Tuple
@@ -235,7 +240,8 @@ def lm_prefill_chunk(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
                      cache, *, lengths: Optional[jax.Array] = None,
                      kv_repeat: int = 1, shared_kv_repeat: int = 1,
                      moe_groups: int = 1,
-                     kv_bucket: Optional[int] = None) -> Tuple[jax.Array, Any]:
+                     kv_bucket: Optional[int] = None,
+                     rope_len: Optional[int] = None) -> Tuple[jax.Array, Any]:
     """One state-carrying prefill chunk: process ``S`` prompt tokens
     starting at each row's running offset ``cache["pos"]``.
 
@@ -250,19 +256,31 @@ def lm_prefill_chunk(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
     to fp tolerance) with peak activation memory O(chunk), not O(prompt).
 
     ``kv_bucket`` (static int, or None for the full cache) bounds attention
-    to the live prefix: the KV caches are sliced to their first
-    ``kv_bucket`` rows before the flash kernels run and written back after,
-    so the chunk's attention FLOPs/IO scale with the true prefix rather
-    than ``max_seq``.  The caller must pick ``kv_bucket >= max(pos) +
-    chunk`` (see ``repro.serving.bucketing``); outputs are bit-identical to
-    the unbucketed program.
+    to the live prefix: KV-cache leaves larger than the bucket are sliced
+    to their first ``kv_bucket`` rows before the flash kernels run and
+    written back after, so the chunk's attention FLOPs/IO scale with the
+    true prefix rather than ``max_seq``.  The caller must pick
+    ``kv_bucket >= max(pos) + chunk`` capped at the model's KV extent (see
+    ``repro.serving.bucketing``: the ladder tops out at the largest leaf,
+    which for rolling architectures is the window); outputs are
+    bit-identical to the unbucketed program.  Rolling ring-buffer leaves
+    are only ever sliced while the live prefix hasn't wrapped (the caller
+    contract above guarantees it); ``REPRO_RING_BUCKETS=0`` keeps them at
+    the full window regardless.
+
+    ``rope_len`` (static int, or None) sizes the rope tables.  Rolling
+    architectures need it: their largest cache leaf is the *window*, but
+    chunk positions run up to the full prompt length — the serving layer
+    passes its ``max_seq``.  Values at a given position are identical for
+    any sufficient table size.
 
     Returns ``(logits of each row's last valid chunk token [B,1,V],
     updated cache)`` with ``pos`` advanced by ``lengths``."""
     _check_kv_bucket(cfg, kv_bucket)
     full_cache = cache
     if kv_bucket is not None:
-        cache = _slice_kv_cache(cache, kv_bucket)
+        cache = _slice_kv_cache(cache, kv_bucket,
+                                keep_extent=_ring_slice_exempt(cfg))
     x = _embed(cfg, params, inputs)
     b, s = x.shape[0], x.shape[1]
     pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), (b,))
@@ -272,7 +290,7 @@ def lm_prefill_chunk(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
         lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
     chunk_mask = jnp.arange(s)[None, :] < lengths[:, None]
     max_seq = _cache_max_seq(cfg, cache) or s
-    rope, rope_local = _rope_for(cfg, max(s, max_seq))
+    rope, rope_local = _rope_for(cfg, max(s, max_seq, rope_len or 0))
     x, new_segs = _run_segments(cfg, params, x, cache=cache, pos=pos,
                                 kv_repeat=kv_repeat,
                                 shared_kv_repeat=shared_kv_repeat,
@@ -290,14 +308,18 @@ def lm_prefill_chunk(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
 
 def lm_decode_step(cfg: ModelConfig, params, token: jax.Array, cache, *,
                    kv_repeat: int = 1, shared_kv_repeat: int = 1,
-                   moe_groups: int = 1) -> Tuple[jax.Array, Any]:
+                   moe_groups: int = 1,
+                   rope_len: Optional[int] = None) -> Tuple[jax.Array, Any]:
     """One token step. token: [B, 1] int32 (or features [B,1,feat]).
-    ``cache["pos"]`` is a [B] vector: rows may sit at different offsets."""
+    ``cache["pos"]`` is a [B] vector: rows may sit at different offsets.
+    ``rope_len`` (static) sizes the rope tables past the cache extent —
+    required for rolling-window architectures whose positions outgrow
+    their window-sized caches (the serving layer passes ``max_seq``)."""
     pos = cache["pos"]
     inputs = {"tokens": token} if token.ndim == 2 else {"features": token}
     x = _embed(cfg, params, inputs)
     max_seq = _cache_max_seq(cfg, cache) or 1
-    rope, rope_local = _rope_for(cfg, max_seq)
+    rope, rope_local = _rope_for(cfg, max(max_seq, rope_len or 0))
     x, new_segs = _run_segments(cfg, params, x, cache=cache, pos=pos,
                                 kv_repeat=kv_repeat,
                                 shared_kv_repeat=shared_kv_repeat,
@@ -311,7 +333,8 @@ def decode_tokens(cfg: ModelConfig, params, cache, first_token: jax.Array,
                   n: int, *, kv_repeat: int = 1, shared_kv_repeat: int = 1,
                   moe_groups: int = 1, temperature: float = 0.0,
                   rng: Optional[jax.Array] = None,
-                  kv_bucket: Optional[int] = None
+                  kv_bucket: Optional[int] = None,
+                  rope_len: Optional[int] = None
                   ) -> Tuple[jax.Array, Any]:
     """Fused multi-token decode: run ``n`` generation steps inside one
     ``jax.lax.scan``.
@@ -337,7 +360,8 @@ def decode_tokens(cfg: ModelConfig, params, cache, first_token: jax.Array,
     _check_kv_bucket(cfg, kv_bucket)
     full_cache = cache
     if kv_bucket is not None:
-        cache = _slice_kv_cache(cache, kv_bucket)
+        cache = _slice_kv_cache(cache, kv_bucket,
+                                keep_extent=_ring_slice_exempt(cfg))
 
     def select(logits: jax.Array, key) -> jax.Array:
         lg = logits[:, 0, :cfg.vocab_size]
@@ -351,7 +375,7 @@ def decode_tokens(cfg: ModelConfig, params, cache, first_token: jax.Array,
         tok, c = carry
         logits, c = lm_decode_step(cfg, params, tok, c, kv_repeat=kv_repeat,
                                    shared_kv_repeat=shared_kv_repeat,
-                                   moe_groups=moe_groups)
+                                   moe_groups=moe_groups, rope_len=rope_len)
         nxt = select(logits, key)
         return (nxt, c), nxt[:, 0]
 
@@ -377,20 +401,44 @@ def _check_kv_bucket(cfg: ModelConfig, kv_bucket: Optional[int]) -> None:
         return
     if kv_bucket < 1:
         raise ValueError(f"kv_bucket must be >= 1, got {kv_bucket}")
-    if any(kind in ("local", "encoder") for kind in cfg.layer_kinds):
+    if "encoder" in cfg.layer_kinds:
         raise ValueError(
-            "kv_bucket requires append-only full-length KV caches; rolling "
-            "sliding-window / encoder layers cannot be prefix-sliced")
+            "kv_bucket requires causal KV caches; encoder (bidirectional) "
+            "layers cannot be prefix-sliced")
 
 
-def _slice_kv_cache(cache, bucket: int):
+def _ring_slice_exempt(cfg: ModelConfig) -> Optional[int]:
+    """Extent of rolling ring-buffer KV leaves to EXEMPT from bucket
+    slicing, or None when they may slice.  With ``REPRO_RING_BUCKETS=1``
+    (the default) ring leaves slice like append-only ones — valid because
+    callers select ``bucket >= min(max(pos) + chunk, extent)`` from the
+    extent-topped ladder, so a ring is only ever sliced before its prefix
+    wraps.  The env kill-switch keeps rings at the full window instead."""
+    from repro.kernels import dispatch as kdispatch
+    if kdispatch.ring_buckets():
+        return None
+    if "local" in cfg.layer_kinds and cfg.attn is not None:
+        return cfg.attn.sliding_window
+    return None
+
+
+def _slice_kv_cache(cache, bucket: int, keep_extent: Optional[int] = None):
     """Slice every KV-cache leaf to its first ``bucket`` rows (axis 2 of the
     stacked [n_rep, B, Skv, KV, hd] leaves).  Callers guarantee every read
     and write of the upcoming program lands below ``bucket``; the masked
     tail contributes exact zeros, so outputs are bit-identical to the
-    full-cache program while attention FLOPs/IO track the live prefix."""
+    full-cache program while attention FLOPs/IO track the live prefix.
+    For rolling ring-buffer leaves "lands below bucket" additionally means
+    the prefix has not wrapped yet — guaranteed by selecting the bucket
+    from a ladder that tops out at the model's largest KV extent (window
+    for rolling architectures).  ``keep_extent`` exempts leaves of exactly
+    that extent (the ``REPRO_RING_BUCKETS=0`` escape hatch) — extent
+    matching is deliberately conservative: an append-only leaf that
+    coincidentally equals the window is also kept whole, which only costs
+    FLOPs in that already-degraded debug mode, never correctness."""
     def f(path, leaf):
-        if _is_kv_leaf(path) and leaf.shape[2] > bucket:
+        if (_is_kv_leaf(path) and leaf.shape[2] > bucket
+                and leaf.shape[2] != keep_extent):
             return jax.lax.slice_in_dim(leaf, 0, bucket, axis=2)
         return leaf
     return jax.tree_util.tree_map_with_path(f, cache)

@@ -8,6 +8,7 @@ one source of truth, no drift between init and partitioning.
 from __future__ import annotations
 
 import math
+import zlib
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -64,7 +65,13 @@ def _init_leaf(key: jax.Array, d: ParamDef, dtype) -> jax.Array:
 
 
 def init_params(defs, key: jax.Array, dtype=jnp.float32):
-    """Initialize a param pytree from its defs; keys derived from tree paths."""
+    """Initialize a param pytree from its defs; keys derived from tree paths.
+
+    The per-leaf fold-in constant must be a STABLE hash of the path:
+    Python's ``hash(str)`` is salted per process (PYTHONHASHSEED), which
+    made every fresh interpreter draw different "seeded" params — the
+    repo's bit-exact greedy parity tests became a per-invocation lottery
+    over argmax near-ties.  crc32 is process-independent."""
     leaves = jax.tree_util.tree_leaves_with_path(defs, is_leaf=is_def)
 
     def path_str(path) -> str:
@@ -72,7 +79,8 @@ def init_params(defs, key: jax.Array, dtype=jnp.float32):
 
     out = {}
     for path, d in leaves:
-        k = jax.random.fold_in(key, np.uint32(hash(path_str(path)) & 0x7FFFFFFF))
+        k = jax.random.fold_in(key, np.uint32(
+            zlib.crc32(path_str(path).encode()) & 0x7FFFFFFF))
         out[path_str(path)] = _init_leaf(k, d, dtype)
 
     # Rebuild nested structure.

@@ -10,12 +10,24 @@ is flattened into a constant.
 The fix is a host-side *bucket ladder*: before dispatching a compiled chunk
 or decode program, the caller picks the smallest power-of-two KV extent that
 covers the live prefix (``max(pos) + chunk``) and passes it as a static
-argument.  The models layer slices the KV cache to that extent, runs the
+argument.  The models layer slices the KV caches to that extent, runs the
 flash/decode kernels over the slice, and writes the slice back — masked
 attention over the dropped tail contributes exact zeros, so outputs are
 bit-identical to the full-cache program while FLOPs/IO track the true
-prefix.  Because the ladder has O(log2(max_seq)) rungs, XLA compiles a
+prefix.  Because the ladder has O(log2(extent)) rungs, XLA compiles a
 bounded number of programs no matter how positions evolve.
+
+Ladder top = the model's largest KV-cache extent, not the serving
+``max_seq``: append-only caches span ``max_seq``, but rolling
+sliding-window (ring-buffer) caches span exactly their ``window`` — for a
+pure-windowed architecture the ladder therefore caps at ``window`` and
+compiles stay O(log window) however long the prompt grows
+(:func:`kv_cache_extent` computes the cap from the config).  Capping
+``needed`` at the extent is also what makes bucket-slicing a ring safe: a
+ring leaf is only sliced when ``bucket < window``, and since
+``bucket >= min(needed, extent)`` with ``window <= extent`` that implies
+``bucket >= max(pos) + chunk`` — i.e. the ring has not wrapped inside the
+slice.
 
 Edge discipline (the classic off-by-one): a prefix that lands exactly on a
 rung (``pos + chunk == bucket``) selects *that* rung — never the next one
@@ -24,7 +36,9 @@ fall off the slice and decode would read a stale row).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
+
+from repro.core.config import ModelConfig
 
 # Smallest rung: below this, slicing saves nothing but still costs a compile.
 MIN_BUCKET = 128
@@ -51,7 +65,9 @@ def select_kv_bucket(needed: int, max_seq: int,
     will read *and* write: ``max(pos) + chunk``).
 
     ``needed == rung`` returns exactly that rung; ``needed`` may not exceed
-    ``max_seq`` (admission control rejects such prompts earlier)."""
+    ``max_seq`` — callers cap it at the ladder top first (the model's KV
+    extent from :func:`kv_cache_extent`; admission control rejects prompts
+    beyond the serving ``max_seq`` earlier)."""
     if needed > max_seq:
         raise ValueError(
             f"needed KV extent {needed} exceeds max_seq {max_seq}")
@@ -59,3 +75,33 @@ def select_kv_bucket(needed: int, max_seq: int,
         if b >= needed:
             return b
     return max_seq  # pragma: no cover — ladder always ends at max_seq
+
+
+def kv_cache_extent(cfg: ModelConfig, max_seq: int) -> Optional[int]:
+    """Largest KV-cache leaf extent the model allocates at ``max_seq`` —
+    the bucket-ladder top.  Append-only caches (dense/moe/hybrid/shared
+    attention) span ``max_seq``; rolling "local" caches span exactly their
+    sliding window (which may exceed ``max_seq`` — the rolling invariant
+    needs all ``window`` slots).  None when no layer holds a KV cache
+    (pure-SSM stacks: bucketing would cost a compile per rung for
+    nothing)."""
+    kinds = set(cfg.layer_kinds)
+    extents = []
+    if kinds & {"dense", "moe", "dense_moe", "hybrid_par"}:
+        extents.append(max_seq)
+    if cfg.shared_attn is not None and "mamba2+shared" in kinds:
+        extents.append(max_seq)
+    if "local" in kinds:
+        window = cfg.attn.sliding_window if cfg.attn is not None else None
+        extents.append(window if window is not None else max_seq)
+    return max(extents) if extents else None
+
+
+def rope_len_for(cfg: ModelConfig, max_seq: int) -> Optional[int]:
+    """Static rope-table override for chunk/decode programs: needed exactly
+    when the model's largest KV cache (the window, for rolling archs) is
+    smaller than the positions the serving layer will visit.  One rule for
+    the engine, the prefill scheduler, and the benches — rope table size
+    never changes the values at a given position, only coverage."""
+    extent = kv_cache_extent(cfg, max_seq)
+    return max_seq if extent is not None and extent < max_seq else None

@@ -4,6 +4,12 @@ The cache pytrees themselves are built by ``models.lm.init_lm_cache``;
 this module adds the operational pieces a serving deployment needs:
 sizing (admission control), slot extraction/insertion, and host
 offload/restore of individual slots (preemption & prefix reuse).
+
+Offload blobs always carry FULL cache rows plus the slot's ``pos`` entry.
+``pos`` doubles as the ring cursor of rolling sliding-window caches (slot
+i holds the token with ``pos % window == i``), so a preempted request
+restores bit-exactly even when the engine preempts it mid-window-wrap or
+resumes it under a different KV bucket.
 """
 from __future__ import annotations
 

@@ -15,17 +15,21 @@ carries a per-slot ``pos`` vector, so slots admitted at different times
 decode at their own offsets (no shared position counter).
 
 Admission runs through the chunked-prefill subsystem
-(:mod:`repro.serving.prefill`): queued prompts of heterogeneous lengths
-form one padded group, and every engine iteration runs exactly ONE prefill
-chunk interleaved with the decode burst — a 57K-token prompt can no longer
-stall the decoding slots behind a monolithic O(L) prefill.  When the queue
-is starved of slots, the engine preempts the live slot with the most
-remaining decode work (host offload via :mod:`repro.serving.cache`) and
-restores it once a slot frees up.
+(:mod:`repro.serving.prefill`) for EVERY decodable architecture — dense,
+rolling sliding-window, SSM, hybrid, windowed-hybrid: queued prompts of
+heterogeneous lengths form one padded group, and every engine iteration
+runs exactly ONE prefill chunk interleaved with the decode burst — a
+57K-token prompt can no longer stall the decoding slots behind a
+monolithic O(L) prefill.  Rolling-window layers prefill into their
+ring-buffer caches chunk-by-chunk (modular scatter + ring-unrolling
+mask); there is no separate one-shot admission pipeline anymore.  When
+the queue is starved of slots, the engine preempts the live slot with
+the most remaining decode work (host offload via
+:mod:`repro.serving.cache` — the ring cursor travels inside the offloaded
+``pos``) and restores it once a slot frees up.
 """
 from __future__ import annotations
 
-import logging
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -37,12 +41,10 @@ from repro.core.config import ModelConfig
 from repro.distributed.sharding import ShardingPlan
 from repro.models.lm import (decode_tokens, init_lm_cache, lm_decode_step,
                              lm_forward, lm_prefill)
-from repro.serving.bucketing import select_kv_bucket
+from repro.serving.bucketing import (kv_cache_extent, rope_len_for,
+                                     select_kv_bucket)
 from repro.serving.cache import offload_slot, restore_slot
-from repro.serving.prefill import (ChunkedPrefill, _has_attn_cache,
-                                   supports_chunked_prefill)
-
-log = logging.getLogger(__name__)
+from repro.serving.prefill import ChunkedPrefill, supports_chunked_prefill
 
 
 def make_prefill_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
@@ -68,15 +70,20 @@ def make_decode_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
 
 
 def make_decode_tokens(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
-    """Builder for the fused multi-token decode loop (jit with n static)."""
+    """Builder for the fused multi-token decode loop (jit with n static).
+
+    ``rope_len`` (static) sizes the rope tables past the cache extent —
+    rolling-window caches span only their window, but decode positions run
+    to the serving ``max_seq``."""
     kv_repeat = plan.kv_repeat if plan else 1
     moe_groups = plan.moe_groups if plan else 1
 
     def decode_n(params, cache, first_token, n: int,
-                 kv_bucket: Optional[int] = None):
+                 kv_bucket: Optional[int] = None,
+                 rope_len: Optional[int] = None):
         return decode_tokens(cfg, params, cache, first_token, n,
                              kv_repeat=kv_repeat, moe_groups=moe_groups,
-                             kv_bucket=kv_bucket)
+                             kv_bucket=kv_bucket, rope_len=rope_len)
 
     return decode_n
 
@@ -102,12 +109,14 @@ def greedy_generate(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
     kv_repeat = plan.kv_repeat if plan else 1
     cache = init_lm_cache(cfg, batch, max_seq, kv_repeat=kv_repeat)
     prefill = jax.jit(make_prefill_step(cfg, plan))
-    decode_n = jax.jit(make_decode_tokens(cfg, plan), static_argnames=("n",))
+    decode_n = jax.jit(make_decode_tokens(cfg, plan),
+                       static_argnames=("n", "rope_len"))
     logits, cache = prefill(params, inputs, cache)
     first = jnp.argmax(logits[..., :cfg.vocab_size], -1).astype(jnp.int32)
     if gen_len <= 1:
         return first, cache
-    rest, cache = decode_n(params, cache, first, n=gen_len - 1)
+    rest, cache = decode_n(params, cache, first, n=gen_len - 1,
+                           rope_len=rope_len_for(cfg, max_seq))
     return jnp.concatenate([first, rest], axis=1), cache
 
 
@@ -157,31 +166,40 @@ class ServingEngine:
     """Fixed-slot continuous batching over the fused decode loop.
 
     Each :meth:`step` runs one admission move — one chunk of the in-flight
-    mixed-length prefill group, a preempted-slot restore, or (when chunked
-    prefill is unsupported) a one-shot batched prefill — then decodes
+    mixed-length prefill group, or a preempted-slot restore — then decodes
     ``decode_block`` tokens for every slot in one compiled loop.  Prefill
     and decode interleave: a long prompt prefilling chunk-by-chunk never
     blocks decode progress on live slots.  Per-slot ``pos`` means
     late-admitted slots attend only over their own valid cache rows.
+    Every decodable architecture admits through this one path — encoder
+    and audio-frontend configs have no autoregressive serving step and
+    are rejected at construction.
 
     Attention work is bounded to the live prefix by static KV bucketing
     (:mod:`repro.serving.bucketing`): every decode burst and prefill chunk
     runs with the smallest power-of-two KV extent covering
-    ``max(live pos) + block`` — bit-identical outputs, O(log max_seq)
-    compiled programs, and FLOPs/IO that grow with the true context
-    instead of ``max_seq``.  Architectures on the grouped fallback
-    (rolling windows, encoders, frontends) decode against the full cache.
+    ``max(live pos) + block``, capped at the model's largest KV cache —
+    ``max_seq`` for append-only caches, the *window* for rolling ones —
+    so outputs stay bit-identical with O(log extent) compiled programs
+    and FLOPs/IO that grow with the true context.
 
     When queued prompts are starved (no slot has freed for
     ``preempt_after`` iterations and no prefill is in flight), the live
     slot with the most remaining decode work is offloaded to host memory
-    and requeued; it is restored — states, next token, position — once a
-    slot frees, and resumes exactly where it stopped.
+    and requeued; it is restored — states, next token, position (which
+    doubles as the rolling ring cursor: slot i of a rolling cache holds
+    the token with ``pos % window == i``) — once a slot frees, and
+    resumes exactly where it stopped.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int, max_seq: int,
                  plan: Optional[ShardingPlan] = None, decode_block: int = 8,
                  chunk_size: Optional[int] = None, preempt_after: int = 4):
+        if not supports_chunked_prefill(cfg):
+            raise ValueError(
+                f"{cfg.name}: no autoregressive serving path (encoder / "
+                "audio-frontend architectures serve through "
+                "make_encode_step, not the slot engine)")
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -189,38 +207,25 @@ class ServingEngine:
         self.decode_block = decode_block
         kv_repeat = plan.kv_repeat if plan else 1
         self.cache = init_lm_cache(cfg, slots, max_seq, kv_repeat=kv_repeat)
-        self._prefill = jax.jit(make_prefill_step(cfg, plan))
         self._decode_n = jax.jit(make_decode_tokens(cfg, plan),
-                                 static_argnames=("n", "kv_bucket"))
+                                 static_argnames=("n", "kv_bucket",
+                                                  "rope_len"))
         self._scatter = jax.jit(_scatter_group)
         self.kv_repeat = kv_repeat
         self.chunk_size = chunk_size or min(256, max_seq)
         self.preempt_after = preempt_after
-        self.chunked = supports_chunked_prefill(cfg)
-        # KV bucketing needs append-only full-length caches — exactly the
-        # chunked-prefill precondition — and is pointless without KV.
-        self.kv_buckets = self.chunked and _has_attn_cache(cfg)
-        if not self.chunked:
-            reasons = [k for k in ("local", "encoder")
-                       if k in cfg.layer_kinds]
-            if cfg.frontend != "none":
-                reasons.append(f"{cfg.frontend}-frontend")
-            log.warning(
-                "%s: chunked prefill unsupported (%s layers); falling back "
-                "to one-shot grouped prefill admission — long prompts "
-                "prefill monolithically and KV bucketing is disabled",
-                cfg.name, "/".join(reasons) or "unknown")
-        self._chunked_prefill = (
-            ChunkedPrefill(cfg, params, max_seq=max_seq,
-                           chunk_size=self.chunk_size, plan=plan)
-            if self.chunked else None)
+        # bucket-ladder top: the model's largest KV extent (window-capped
+        # for rolling archs); None = no KV cache worth bucketing
+        self.kv_extent = kv_cache_extent(cfg, max_seq)
+        self.kv_buckets = self.kv_extent is not None
+        self.rope_len = rope_len_for(cfg, max_seq)
+        self._chunked_prefill = ChunkedPrefill(
+            cfg, params, max_seq=max_seq, chunk_size=self.chunk_size,
+            plan=plan)
         # slots reserved for the in-flight prefill group: row i of the
         # group lands in slot _pending[i][0] when its prompt completes
         self._pending: List[Tuple[int, Request]] = []
         self._starved = 0
-        # preallocated prefill cache templates keyed by admission batch size
-        # (prefill is functional, so one template serves every admission)
-        self._templates: Dict[int, Any] = {}
         self.live: List[Optional[Request]] = [None] * slots
         self.tokens = np.zeros((slots, 1), np.int32)
         self.pos = np.zeros((slots,), np.int64)
@@ -246,15 +251,6 @@ class ServingEngine:
                 f"max_seq-2 ({self.max_seq - 2}); no room to decode")
         self.queue.append(req)
 
-    def _template(self, batch: int):
-        """Preallocated prefill cache templates.  Admission only ever uses
-        batch sizes 1 and ``slots``, so at most two templates are built and
-        both are reused for every subsequent admission."""
-        if batch not in self._templates:
-            self._templates[batch] = init_lm_cache(
-                self.cfg, batch, self.max_seq, kv_repeat=self.kv_repeat)
-        return self._templates[batch]
-
     # ----------------------------------------------------------- admission
     def _restore(self, b: int, req: Request) -> None:
         """Re-admit a preempted request from its host-offloaded state."""
@@ -266,17 +262,6 @@ class ServingEngine:
         self.stats["restores"] += 1
 
     def _admit(self) -> None:
-        if not self.chunked:
-            # deterministic fallback path: one-shot grouped admission plus
-            # the same starvation preemption the chunked path gets (a
-            # queued prompt must never wait forever behind long decodes)
-            if self._admit_grouped() or not self.queue:
-                self._starved = 0
-            else:
-                self._starved += 1
-                if self._starved >= self.preempt_after:
-                    self._preempt()
-            return
         reserved = {b for b, _ in self._pending}
         free = [b for b in range(self.slots)
                 if self.live[b] is None and b not in reserved]
@@ -349,58 +334,11 @@ class ServingEngine:
         self._starved = 0
         self.stats["preemptions"] += 1
 
-    def _admit_grouped(self) -> bool:
-        """Fallback admission for architectures without chunked-prefill
-        support (rolling-window caches, encoders): batched same-length
-        one-shot prefills into preallocated templates.  Returns whether any
-        request was admitted or restored (the starvation signal)."""
-        free = [b for b in range(self.slots) if self.live[b] is None]
-        batch: List[Tuple[int, Request]] = []
-        restored = False
-        while free and self.queue:
-            req = self.queue[0]
-            if req.blob is not None:
-                self.queue.pop(0)
-                self._restore(free.pop(0), req)
-                restored = True
-                continue
-            self.queue.pop(0)
-            batch.append((free.pop(0), req))
-        if not batch:
-            return restored
-        # one batched prefill per prompt length (stale rows beyond the
-        # prompt are masked by the per-slot pos, so templates need no reset)
-        by_len: Dict[int, List[Tuple[int, Request]]] = {}
-        for b, req in batch:
-            by_len.setdefault(len(req.prompt), []).append((b, req))
-        # bound XLA compiles to two prefill shapes per prompt length
-        # (batch 1 and batch slots): intermediate group sizes admit singly
-        groups: List[List[Tuple[int, Request]]] = []
-        for group in by_len.values():
-            if len(group) == self.slots:
-                groups.append(group)
-            else:
-                groups.extend([m] for m in group)
-        for group in groups:
-            prompts = jnp.asarray(np.stack([req.prompt for _, req in group]))
-            logits, one = self._prefill(self.params, {"tokens": prompts},
-                                        self._template(len(group)))
-            nxt = np.asarray(
-                jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1), np.int32)
-            dst = jnp.asarray([b for b, _ in group], jnp.int32)
-            self.cache = self._scatter(self.cache, one, dst)
-            for i, (b, req) in enumerate(group):
-                req.out.append(int(nxt[i]))
-                self.tokens[b, 0] = int(nxt[i])
-                self.pos[b] = len(req.prompt)
-                self.live[b] = req
-        return True
-
     # ------------------------------------------------------------- decode
     def step(self) -> int:
         """One engine iteration: one admission move (prefill chunk /
-        restore / fallback prefill) interleaved with a ``decode_block``
-        burst for all live slots.  Returns live + queued + in-prefill."""
+        restore) interleaved with a ``decode_block`` burst for all live
+        slots.  Returns live + queued + in-prefill."""
         self.stats["iters"] += 1
         self._chunk_ran = False
         self._admit()
@@ -412,17 +350,20 @@ class ServingEngine:
         kv_bucket = None
         if self.kv_buckets:
             # bound the whole burst's attention to the live prefix: every
-            # live slot reads/writes below max(pos) + decode_block.  Stale
+            # live slot reads/writes below max(pos) + decode_block, capped
+            # at the extent ladder's top (rolling caches: the window —
+            # their reads are already window-bounded past the cap).  Stale
             # pos of retired slots is excluded (their rows neither read
             # sensibly nor write at all inside the bucket).
             live_pos = [int(self.pos[b]) for b, r in enumerate(self.live)
                         if r is not None]
             kv_bucket = select_kv_bucket(
-                min(max(live_pos) + kblk, self.max_seq), self.max_seq)
+                min(max(live_pos) + kblk, self.kv_extent), self.kv_extent)
             self.buckets_used.add(kv_bucket)
         toks, self.cache = self._decode_n(self.params, self.cache,
                                           jnp.asarray(self.tokens), n=kblk,
-                                          kv_bucket=kv_bucket)
+                                          kv_bucket=kv_bucket,
+                                          rope_len=self.rope_len)
         toks = np.asarray(toks)                     # one host sync per block
         n_live = 0
         decoded = 0

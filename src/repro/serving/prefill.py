@@ -7,9 +7,13 @@ every decoding slot behind it (head-of-line blocking).  This module
 splits prompts into fixed-size chunks and drives them through the single
 compiled :func:`repro.models.lm.lm_prefill_chunk` step, which carries
 state between chunks — attention layers scatter KV at each row's running
-offset with an offset causal mask, mamba1/mamba2 layers carry their
-conv + SSM states — so a 57K-token prompt prefills in 1K-token chunks
-with flat peak memory and chunk-parity with one-shot prefill.
+offset with an offset causal mask, rolling sliding-window layers fold the
+chunk into their ring-buffer caches with a modular mask (no rolled copy),
+mamba1/mamba2 layers carry their conv + SSM states — so a 57K-token
+prompt prefills in 1K-token chunks with flat peak memory and chunk-parity
+with one-shot prefill.  Every decodable architecture family — dense,
+windowed ("local"), SSM, hybrid, windowed-hybrid — admits through this
+one path; there is no separate one-shot fallback pipeline.
 
 Chunk/decode interleave contract (what ``ServingEngine`` relies on):
 
@@ -26,16 +30,20 @@ Chunk/decode interleave contract (what ``ServingEngine`` relies on):
 * Heterogeneous prompt lengths need no same-length grouping: prompts are
   right-padded onto the chunk grid and a per-row ``lengths`` vector makes
   padding inert (no SSM-state updates; stale KV is overwritten or masked
-  by the decode-time valid_len).  Rows past the real group (batch padded
-  to a template size) are zero-length and therefore complete no-ops.
+  by the decode-time valid_len, and ring-buffer caches gate their writes
+  on the valid length so padding never clobbers live window history).
+  Rows past the real group (batch padded to a template size) are
+  zero-length and therefore complete no-ops.
 * The group cache template is allocated once per retained batch size and
   reused for every subsequent group (prefill is functional — the template
   itself is never mutated).
 
 Compiled-shape discipline: every chunk step lowers to the same
 ``[batch, chunk]`` program regardless of prompt length, so XLA compiles
-at most one prefill program per retained batch size and peak activation
-memory is O(chunk), not O(prompt).
+at most one prefill program per retained batch size (times the KV bucket
+rungs actually touched — a ladder that tops out at the model's largest
+KV extent, i.e. the *window* for rolling architectures) and peak
+activation memory is O(chunk), not O(prompt).
 """
 from __future__ import annotations
 
@@ -47,8 +55,10 @@ import numpy as np
 
 from repro.core.config import ModelConfig
 from repro.distributed.sharding import ShardingPlan
+from repro.kernels import dispatch as kdispatch
 from repro.models.lm import init_lm_cache, lm_prefill_chunk
-from repro.serving.bucketing import select_kv_bucket
+from repro.serving.bucketing import (kv_cache_extent, rope_len_for,
+                                     select_kv_bucket)
 
 
 def _has_attn_cache(cfg: ModelConfig) -> bool:
@@ -58,42 +68,52 @@ def _has_attn_cache(cfg: ModelConfig) -> bool:
 
 
 def supports_chunked_prefill(cfg: ModelConfig) -> bool:
-    """Chunked prefill needs causal attention over a full-length KV cache.
+    """Chunked prefill needs causal attention with a state-carrying cache.
 
-    Excluded: encoder layers (bidirectional — every token sees the whole
-    sequence, so there is no prefix-extension recurrence), sliding-window
-    "local" layers (their rolling caches only hold the trailing window),
-    and feature frontends (vision/audio prefixes change the token grid).
+    Rolling sliding-window ("local") layers qualify: their ring-buffer
+    caches carry the trailing window between chunks (modular scatter +
+    ring-unrolling mask).  Excluded: encoder layers (bidirectional —
+    every token sees the whole sequence, so there is no prefix-extension
+    recurrence) and audio frontends (the serving path feeds token chunks;
+    audio models embed precomputed frame features instead).  Vision
+    frontends pass — token-only serving treats them as dense decoders.
     """
-    if cfg.frontend != "none":
+    if cfg.frontend == "audio":
         return False
-    return not any(kind in ("encoder", "local") for kind in cfg.layer_kinds)
+    return "encoder" not in cfg.layer_kinds
 
 
 def _make_chunk_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
     kv_repeat = plan.kv_repeat if plan else 1
     moe_groups = plan.moe_groups if plan else 1
 
-    def chunk_step(params, tokens, lengths, cache, kv_bucket=None):
+    def chunk_step(params, tokens, lengths, cache, kv_bucket=None,
+                   rope_len=None):
         return lm_prefill_chunk(cfg, params, {"tokens": tokens}, cache,
                                 lengths=lengths, kv_repeat=kv_repeat,
-                                moe_groups=moe_groups, kv_bucket=kv_bucket)
+                                moe_groups=moe_groups, kv_bucket=kv_bucket,
+                                rope_len=rope_len)
 
     return chunk_step
 
 
 # jitted chunk steps keyed by everything the closure actually depends on
-# (cfg plus the plan's kv_repeat/moe_groups): repeated chunked_prefill
-# calls must reuse the compiled program, not re-trace.  kv_bucket is a
-# static argument: one compile per bucket-ladder rung actually touched.
-_STEP_CACHE: Dict[Tuple[ModelConfig, int, int], Any] = {}
+# (cfg plus the plan's kv_repeat/moe_groups, plus the REPRO_RING_BUCKETS
+# flag — it is read at TRACE time inside lm_prefill_chunk, so it must key
+# the cache or flipping the env after a first compile would silently
+# reuse the old trace): repeated chunked_prefill calls must reuse the
+# compiled program, not re-trace.  kv_bucket and rope_len are static
+# arguments: one compile per bucket-ladder rung actually touched
+# (rope_len is constant per serving deployment).
+_STEP_CACHE: Dict[Tuple[ModelConfig, int, int, bool], Any] = {}
 
 
 def _jitted_chunk_step(cfg: ModelConfig, plan: Optional[ShardingPlan]):
-    key = (cfg, plan.kv_repeat if plan else 1, plan.moe_groups if plan else 1)
+    key = (cfg, plan.kv_repeat if plan else 1,
+           plan.moe_groups if plan else 1, kdispatch.ring_buckets())
     if key not in _STEP_CACHE:
         _STEP_CACHE[key] = jax.jit(_make_chunk_step(cfg, plan),
-                                   static_argnames=("kv_bucket",))
+                                   static_argnames=("kv_bucket", "rope_len"))
     return _STEP_CACHE[key]
 
 
@@ -126,7 +146,8 @@ def _cache_kv_extent(cache) -> Optional[int]:
 def chunked_prefill(cfg: ModelConfig, params, tokens: jax.Array, cache, *,
                     chunk_size: int, lengths: Optional[Sequence[int]] = None,
                     plan: Optional[ShardingPlan] = None,
-                    step=None, kv_buckets: bool = True
+                    step=None, kv_buckets: bool = True,
+                    rope_len: Optional[int] = None
                     ) -> Tuple[jax.Array, Any]:
     """Prefill ``tokens`` [B, S] (right-padded, per-row valid ``lengths``)
     in ``chunk_size`` chunks.  Drop-in replacement for
@@ -134,25 +155,41 @@ def chunked_prefill(cfg: ModelConfig, params, tokens: jax.Array, cache, *,
     [B, 1, V], filled cache) — but runs the fixed-shape chunk program
     ceil(S/chunk) times instead of one O(S) program.
 
-    ``kv_buckets`` (default on) bounds each chunk's attention to the live
-    prefix: chunk ``i`` runs with a static KV bucket covering
-    ``(i+1) * chunk`` rows (smallest power-of-two rung), so early chunks
-    pay early-prefix FLOPs/IO instead of ``max_seq``.  Outputs are
-    bit-identical either way.
+    ``kv_buckets`` (default on, also gated by ``REPRO_PREFILL_KV_BUCKETS``)
+    bounds each chunk's attention to the live prefix: chunk ``i`` runs
+    with a static KV bucket covering ``(i+1) * chunk`` rows (smallest
+    power-of-two rung, capped at the model's KV extent — the *window* for
+    rolling architectures), so early chunks pay early-prefix FLOPs/IO
+    instead of the full extent.  Outputs are bit-identical either way.
+
+    ``rope_len`` sizes the rope tables; it defaults to the prompt length
+    when that outgrows the cache extent (rolling windows), so positions
+    past the window still rotate correctly.
 
     ``step`` overrides the compiled chunk callable (e.g. an AOT-compiled
     executable, so benchmarks don't pay a second trace+compile); bucketing
-    is disabled then — the executable's shapes are fixed by its caller.
+    and rope sizing are disabled then — the executable's shapes and tables
+    are fixed by its caller.
     """
     tokens = jnp.asarray(tokens)
     b, total = tokens.shape
     lens = (np.full((b,), total, np.int64) if lengths is None
             else np.asarray(lengths, np.int64))
     kv_extent = None
-    if step is None:
+    aot = step is not None
+    if not aot:
         step = _jitted_chunk_step(cfg, plan)
-        if kv_buckets and supports_chunked_prefill(cfg) and _has_attn_cache(cfg):
+        if (kv_buckets and kdispatch.prefill_kv_buckets()
+                and supports_chunked_prefill(cfg) and _has_attn_cache(cfg)):
             kv_extent = _cache_kv_extent(cache)
+        if rope_len is None and _has_attn_cache(cfg):
+            ext = _cache_kv_extent(cache)
+            if ext is not None and ext < total:
+                # rope_len is STATIC on the jitted step: round the prompt
+                # length up to a power of two so nearby lengths share one
+                # compiled program (values at a position are identical for
+                # any sufficient table size)
+                rope_len = max(ext, 1 << (total - 1).bit_length())
     n_chunks = max(1, -(-total // chunk_size))
     pad = n_chunks * chunk_size - total
     if pad:
@@ -160,14 +197,17 @@ def chunked_prefill(cfg: ModelConfig, params, tokens: jax.Array, cache, *,
     logits = None
     for i in range(n_chunks):
         off, clens, fin = chunk_schedule(lens, chunk_size, i)
-        if kv_extent is not None:
-            bucket = select_kv_bucket(min(off + chunk_size, kv_extent),
-                                      kv_extent)
-            lg, cache = step(params, tokens[:, off:off + chunk_size],
-                             jnp.asarray(clens), cache, kv_bucket=bucket)
-        else:
+        if aot:
             lg, cache = step(params, tokens[:, off:off + chunk_size],
                              jnp.asarray(clens), cache)
+        else:
+            bucket = None
+            if kv_extent is not None:
+                bucket = select_kv_bucket(min(off + chunk_size, kv_extent),
+                                          kv_extent)
+            lg, cache = step(params, tokens[:, off:off + chunk_size],
+                             jnp.asarray(clens), cache, kv_bucket=bucket,
+                             rope_len=rope_len)
         if logits is None:
             logits = lg
         elif fin.any():
@@ -193,7 +233,13 @@ class ChunkedPrefill:
         self.max_seq = max_seq
         self.chunk = int(chunk_size)
         self.kv_repeat = plan.kv_repeat if plan else 1
-        self.kv_buckets = _has_attn_cache(cfg)
+        # bucket ladder top: the model's largest KV extent — max_seq for
+        # append-only caches, the window for rolling ones (O(log window)
+        # compiles however long the prompt grows)
+        self.kv_extent = kv_cache_extent(cfg, max_seq)
+        self.kv_buckets = self.kv_extent is not None
+        # rolling caches span only their window: rope must cover max_seq
+        self.rope_len = rope_len_for(cfg, max_seq)
         self._step = _jitted_chunk_step(cfg, plan)
         self._templates: Dict[int, Any] = {}
         self._group: Optional[Dict[str, Any]] = None
@@ -249,14 +295,17 @@ class ChunkedPrefill:
         assert g is not None
         off, clens, fin = chunk_schedule(g["lens"], self.chunk, g["idx"])
         ctoks = jnp.asarray(g["tokens"][:, off:off + self.chunk])
-        # every row's pos <= off, so a bucket covering off + chunk bounds
-        # all of this chunk's KV reads and writes to the live prefix
-        kv_bucket = (select_kv_bucket(min(off + self.chunk, self.max_seq),
-                                      self.max_seq)
-                     if self.kv_buckets else None)
+        # every row's pos <= off, so a bucket covering off + chunk (capped
+        # at the extent ladder's top) bounds all of this chunk's KV reads
+        # and writes to the live prefix
+        kv_bucket = (select_kv_bucket(min(off + self.chunk, self.kv_extent),
+                                      self.kv_extent)
+                     if self.kv_buckets and kdispatch.prefill_kv_buckets()
+                     else None)
         logits, g["cache"] = self._step(self.params, ctoks,
                                         jnp.asarray(clens), g["cache"],
-                                        kv_bucket=kv_bucket)
+                                        kv_bucket=kv_bucket,
+                                        rope_len=self.rope_len)
         g["idx"] += 1
         fin &= ~g["emitted"]
         fin[g["k"]:] = False

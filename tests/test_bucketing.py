@@ -13,7 +13,8 @@ import pytest
 from repro.core.config import AttnConfig, ModelConfig, SSMConfig
 from repro.models.lm import (decode_tokens, init_lm_cache, init_lm_params,
                              lm_prefill, lm_prefill_chunk)
-from repro.serving.bucketing import MIN_BUCKET, bucket_ladder, select_kv_bucket
+from repro.serving.bucketing import (MIN_BUCKET, bucket_ladder,
+                                     kv_cache_extent, select_kv_bucket)
 from repro.serving.prefill import chunked_prefill
 
 KEY = jax.random.PRNGKey(0)
@@ -176,15 +177,95 @@ def test_chunked_prefill_buckets_match_oneshot():
     np.testing.assert_array_equal(np.asarray(t_chk), np.asarray(t_ref))
 
 
-def test_kv_bucket_rejects_rolling_and_encoder():
-    local = ModelConfig(
-        name="local", family="dense", n_layers=2, d_model=64, d_ff=128,
-        vocab_size=97,
+def _local_cfg(window=16, pure=False):
+    return ModelConfig(
+        name=f"local{window}{'p' if pure else ''}", family="dense",
+        n_layers=2, d_model=64, d_ff=128, vocab_size=97,
+        compute_dtype="float32",
         attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16,
-                        sliding_window=8),
-        layer_pattern=("local", "dense"), vocab_pad_multiple=16)
-    params = init_lm_params(local, KEY)
-    cache = init_lm_cache(local, 1, 32)
-    tok = jnp.zeros((1, 1), jnp.int32)
+                        sliding_window=window),
+        layer_pattern=("local",) if pure else ("local", "dense"),
+        vocab_pad_multiple=16)
+
+
+def test_kv_bucket_rejects_encoder_only():
+    """Encoders (bidirectional) still refuse buckets; rolling windows now
+    ride the ladder (ring-aware slicing) instead of being rejected."""
+    enc = ModelConfig(
+        name="enc", family="encoder", n_layers=2, d_model=64, d_ff=128,
+        vocab_size=97,
+        attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=16, causal=False),
+        layer_pattern=("encoder",), vocab_pad_multiple=16)
     with pytest.raises(ValueError):
-        decode_tokens(local, params, cache, tok, 2, kv_bucket=16)
+        lm_prefill_chunk(enc, init_lm_params(enc, KEY),
+                         {"tokens": jnp.zeros((1, 4), jnp.int32)},
+                         init_lm_cache(enc, 1, 32), kv_bucket=16)
+
+
+def test_kv_cache_extent_window_cap():
+    """The ladder top is the model's largest KV leaf: max_seq for
+    append-only caches, the window for rolling ones — including the
+    window > max_seq corner where the rolling cache outsizes max_seq."""
+    assert kv_cache_extent(_local_cfg(window=16), 64) == 64   # dense wins
+    assert kv_cache_extent(_local_cfg(window=16, pure=True), 64) == 16
+    assert kv_cache_extent(_local_cfg(window=16, pure=True), 12) == 16
+    assert kv_cache_extent(_dense_cfg(), 64) == 64
+    assert kv_cache_extent(_hybrid_cfg(), 64) == 64
+    ssm_only = ModelConfig(
+        name="ssm", family="ssm", n_layers=2, d_model=64, d_ff=0,
+        vocab_size=97, ssm=SSMConfig(d_state=16, headdim=16, chunk=8),
+        layer_pattern=("mamba2",), vocab_pad_multiple=16)
+    assert kv_cache_extent(ssm_only, 64) is None
+
+
+def test_ring_bucket_slice_bit_exact():
+    """Bucket-slicing a not-yet-wrapped ring: chunks at pos + chunk <=
+    bucket < window must produce byte-identical logits and caches to the
+    unbucketed step, and once the prefix wraps the full-window rung takes
+    over (the serving selection rule ``min(pos + chunk, extent)``)."""
+    cfg = _local_cfg(window=16)
+    params = init_lm_params(cfg, KEY)
+    B, C, MS = 2, 8, 64
+    toks = jax.random.randint(jax.random.PRNGKey(7), (B, 4 * C), 0,
+                              cfg.vocab_size, jnp.int32)
+    cache_b = init_lm_cache(cfg, B, MS)
+    cache_f = init_lm_cache(cfg, B, MS)
+    step = jax.jit(
+        lambda p, t, c, kv_bucket: lm_prefill_chunk(
+            cfg, p, {"tokens": t}, c, kv_bucket=kv_bucket),
+        static_argnames=("kv_bucket",))
+    for i in range(4):
+        chunk = toks[:, i * C:(i + 1) * C]
+        # serving rule: smallest extent covering pos + chunk, capped at the
+        # largest leaf — rungs 8, 16 slice the window-16 ring (no wrap
+        # yet), 24+ leave it whole and slice only the dense leaves
+        bucket = min((i + 1) * C, 64)
+        lg_b, cache_b = step(params, chunk, cache_b, bucket)
+        lg_f, cache_f = step(params, chunk, cache_f, None)
+        np.testing.assert_array_equal(np.asarray(lg_b), np.asarray(lg_f))
+    for a, b in zip(jax.tree_util.tree_leaves(cache_b),
+                    jax.tree_util.tree_leaves(cache_f)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rolling_decode_bucketed_matches_full():
+    """decode_tokens on a rolling arch under the extent-capped bucket must
+    emit the same tokens as the full-cache burst, across a ring wrap."""
+    cfg = _local_cfg(window=16, pure=True)
+    params = init_lm_params(cfg, KEY)
+    B, L, MS, N = 2, 13, 96, 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, L), 0,
+                              cfg.vocab_size, jnp.int32)
+    logits, cache = lm_prefill(cfg, params, {"tokens": toks},
+                               init_lm_cache(cfg, B, MS))
+    first = jnp.argmax(logits[..., :cfg.vocab_size], -1).astype(jnp.int32)
+    t_full, c_full = decode_tokens(cfg, params, cache, first, N,
+                                   rope_len=MS)
+    # pos runs 13 -> 21, crossing window 16: the extent rung (= window)
+    # is the only legal bucket once wrapped
+    t_b, c_b = decode_tokens(cfg, params, cache, first, N,
+                             kv_bucket=16, rope_len=MS)
+    np.testing.assert_array_equal(np.asarray(t_b), np.asarray(t_full))
+    for a, b in zip(jax.tree_util.tree_leaves(c_b),
+                    jax.tree_util.tree_leaves(c_full)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -10,7 +10,7 @@ from repro.kernels.attn_decode.ref import decode_attention_ref
 from repro.kernels.conv1d.kernel import causal_conv1d_pallas
 from repro.kernels.conv1d.ref import causal_conv1d_ref
 from repro.kernels.flash.kernel import flash_attention_pallas
-from repro.kernels.flash.ref import attention_ref
+from repro.kernels.flash.ref import attention_ref, ring_kv_positions
 from repro.kernels.ssd.kernel import ssd_pallas
 from repro.kernels.ssd.ref import ssd_chunked_ref, ssd_sequential
 
@@ -126,6 +126,84 @@ def test_flash_kernel_q_offset(dtype):
     err = float(jnp.abs(o_ref.astype(jnp.float32)
                         - o_k.astype(jnp.float32)).max()) / scale
     assert err < _tol(dtype), err
+
+
+def _ring_from_linear(k_lin, wrap, window, ring_len):
+    """Pack the last ``window`` keys before each row's cursor into the ring
+    slot layout (slot j <- newest pos with pos % window == j < wrap)."""
+    b = k_lin.shape[0]
+    ring = np.zeros((b, k_lin.shape[1], ring_len, k_lin.shape[3]),
+                    k_lin.dtype)
+    for bi in range(b):
+        for p in range(max(0, wrap[bi] - window), wrap[bi]):
+            slot = p % window
+            if slot < ring_len:
+                ring[bi, :, slot] = k_lin[bi, :, p]
+    return jnp.asarray(ring)
+
+
+@pytest.mark.parametrize("wrap,window,ring_len,sq", [
+    ([0, 5, 19], 8, 8, 4),        # cursors before/at/after the wrap
+    ([13, 64], 16, 16, 8),
+    # sliced ring (bucket < window): legal only while wrap + sq <= ring_len
+    pytest.param([3, 8], 16, 12, 4, marks=pytest.mark.slow),
+    pytest.param([21, 40], 32, 32, 16, marks=pytest.mark.slow),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32,
+                                   pytest.param(jnp.bfloat16,
+                                                marks=pytest.mark.slow)])
+def test_flash_kernel_ring(wrap, window, ring_len, sq, dtype):
+    """Ring-layout semantics: attention over [ring | chunk] with kv_wrap
+    must equal ordinary windowed attention over the LINEAR key sequence at
+    the same offsets — for ref and Pallas (interpret) alike, including a
+    ring sliced below the window (not-yet-wrapped bucket slice)."""
+    b = len(wrap)
+    T = max(wrap) + sq
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, 4, sq, 32), dtype)
+    k_lin = jax.random.normal(ks[1], (b, 2, T, 32), dtype)
+    v_lin = jax.random.normal(ks[2], (b, 2, T, 32), dtype)
+    off = jnp.asarray(wrap, jnp.int32)
+    # linear-layout oracle: windowed causal attention at per-row offsets
+    o_lin = attention_ref(q, k_lin, v_lin, causal=True, window=window,
+                          q_offset=off)
+    # ring layout: [ring slots | the sq-token chunk]
+    kl, vl = np.asarray(k_lin), np.asarray(v_lin)
+    k_ring = [_ring_from_linear(kl, wrap, window, ring_len)]
+    v_ring = [_ring_from_linear(vl, wrap, window, ring_len)]
+    k_chunk = jnp.stack([k_lin[bi, :, wrap[bi]:wrap[bi] + sq]
+                         for bi in range(b)])
+    v_chunk = jnp.stack([v_lin[bi, :, wrap[bi]:wrap[bi] + sq]
+                         for bi in range(b)])
+    k_r = jnp.concatenate([k_ring[0], k_chunk], axis=2)
+    v_r = jnp.concatenate([v_ring[0], v_chunk], axis=2)
+    o_ref = attention_ref(q, k_r, v_r, causal=True, window=window,
+                          q_offset=off, kv_wrap=off, ring_len=ring_len)
+    o_k = flash_attention_pallas(q, k_r, v_r, causal=True, window=window,
+                                 q_offset=off, kv_wrap=off,
+                                 ring_len=ring_len, block_q=8, block_k=8,
+                                 interpret=True)
+    scale = float(jnp.abs(o_lin.astype(jnp.float32)).max()) + 1e-6
+    for o in (o_ref, o_k):
+        err = float(jnp.abs(o_lin.astype(jnp.float32)
+                            - o.astype(jnp.float32)).max()) / scale
+        assert err < _tol(dtype), err
+
+
+def test_ring_kv_positions_formula():
+    """Slot -> absolute-position recovery: newest pos with pos % window ==
+    slot strictly before the cursor; negative for never-written slots."""
+    wrap = jnp.asarray([0, 3, 8, 13], jnp.int32)
+    kp = np.asarray(ring_kv_positions(wrap, window=8, ring_len=8, skv=12))
+    for bi, w in enumerate([0, 3, 8, 13]):
+        for j in range(8):
+            expect = max((p for p in range(w) if p % 8 == j), default=-99)
+            if expect < 0:
+                assert kp[bi, j] < 0, (bi, j, kp[bi, j])
+            else:
+                assert kp[bi, j] == expect, (bi, j)
+        for j in range(8, 12):                     # chunk tail
+            assert kp[bi, j] == w + (j - 8)
 
 
 # ------------------------------------------------------------ decode attn

@@ -1,10 +1,11 @@
 """Engine-level chunked-prefill regressions: interleaved prefill/decode
 (no head-of-line blocking), mixed-length admission without same-length
 grouping, preemption via host offload/restore (bucketed caches included),
-and the grouped fallback for rolling-window architectures (explicit,
-deterministic, with working preemption and correct cache sizing when
-window and max_seq disagree)."""
-import logging
+and rolling-window architectures on the SAME unified chunked path —
+ring-buffer prefill, starvation preemption across a wrapped ring cursor,
+and correct cache sizing when window and max_seq disagree.  The one-shot
+grouped fallback is gone; encoder/audio configs are rejected at engine
+construction."""
 from functools import partial
 
 import jax
@@ -31,8 +32,11 @@ def _hybrid_cfg():
 
 
 def _local_cfg():
+    # fp32 compute: the engine's ring-buffer chunked prefill and the solo
+    # one-shot baseline reduce in different orders; fp32 keeps the
+    # token-for-token comparison deterministic (no bf16 argmax near-ties)
     return ModelConfig(name="loc", family="dense", n_layers=2, d_model=64,
-                       d_ff=128, vocab_size=97,
+                       d_ff=128, vocab_size=97, compute_dtype="float32",
                        attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16,
                                        sliding_window=8),
                        layer_pattern=("local", "dense"),
@@ -123,23 +127,53 @@ def test_preemption_offload_restore_exact_resume():
     assert all(r.blob is None for r in done.values())
 
 
-def test_grouped_fallback_for_rolling_window():
-    """Sliding-window archs keep the one-shot grouped admission path (their
-    rolling caches cannot chunk) and must still match solo decode."""
+def test_rolling_window_unified_chunked_admission():
+    """Sliding-window archs admit through the SAME chunked pipeline as
+    everything else (ring-buffer prefill — no one-shot fallback): prompts
+    longer than the window must chunk, wrap the ring, and still match
+    solo decode token for token."""
     cfg = _local_cfg()
     params = init_lm_params(cfg, KEY)
     rng = np.random.default_rng(1)
     prompts = [rng.integers(2, cfg.vocab_size, int(n)).astype(np.int32)
-               for n in (6, 11, 6)]
-    eng = ServingEngine(cfg, params, slots=2, max_seq=48, decode_block=4)
-    assert not eng.chunked
+               for n in (6, 21, 11)]                   # 21, 11 > window=8
+    eng = ServingEngine(cfg, params, slots=2, max_seq=48, decode_block=4,
+                        chunk_size=8)
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=p, max_new=8))
     done = {r.rid: r.out for r in eng.run()}
     assert len(done) == len(prompts)
+    # the long prompts really went through the chunk step, not one-shot
+    assert eng.stats["prefill_chunks"] >= 3
+    # bucket ladder capped at the model's KV extent (= max_seq here: the
+    # dense layers dominate the window)
+    assert eng.kv_buckets and eng.kv_extent == 48
     for i, p in enumerate(prompts):
         np.testing.assert_array_equal(np.asarray(done[i][:8]),
                                       _solo(cfg, params, p, 48, 8))
+
+
+def test_pure_rolling_ladder_caps_at_window():
+    """A pure-windowed arch's bucket ladder tops out at the WINDOW, not
+    max_seq: chunk attention is O(window) however long the prompt, and the
+    rope tables must still cover positions past the window."""
+    cfg = ModelConfig(name="locpure2", family="dense", n_layers=2,
+                      d_model=64, d_ff=128, vocab_size=97,
+                      compute_dtype="float32",
+                      attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16,
+                                      sliding_window=8),
+                      layer_pattern=("local",), vocab_pad_multiple=16)
+    params = init_lm_params(cfg, KEY)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(2, cfg.vocab_size, 30).astype(np.int32)
+    eng = ServingEngine(cfg, params, slots=2, max_seq=96, decode_block=4,
+                        chunk_size=8)
+    assert eng.kv_extent == 8 and eng.rope_len == 96
+    eng.submit(Request(rid=0, prompt=prompt, max_new=10))
+    done = {r.rid: r.out for r in eng.run()}
+    assert eng.buckets_used == {8}, eng.buckets_used
+    np.testing.assert_array_equal(np.asarray(done[0][:10]),
+                                  _solo(cfg, params, prompt, 96, 10))
 
 
 def test_submit_rejects_invalid_prompts():
@@ -163,37 +197,39 @@ def test_submit_rejects_invalid_prompts():
     assert [r.rid for r in done] == [2] and len(done[0].out) == 4
 
 
-def test_fallback_is_logged_explicitly(caplog):
-    """The grouped one-shot fallback must announce itself (it silently
-    changes prefill latency characteristics) — once, at engine build."""
-    cfg = _local_cfg()
-    params = init_lm_params(cfg, KEY)
-    with caplog.at_level(logging.WARNING, logger="repro.serving.engine"):
-        eng = ServingEngine(cfg, params, slots=2, max_seq=48)
-    assert not eng.chunked and not eng.kv_buckets
-    msgs = [r.message for r in caplog.records
-            if "chunked prefill unsupported" in r.message]
-    assert len(msgs) == 1 and "local" in msgs[0]
+def test_engine_rejects_non_autoregressive_archs():
+    """Encoder (bidirectional) configs have no decode step: the slot
+    engine must refuse them loudly at construction — the old silent
+    one-shot fallback is gone."""
+    enc = ModelConfig(name="enc", family="encoder", n_layers=2, d_model=64,
+                      d_ff=128, vocab_size=97,
+                      attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=16,
+                                      causal=False),
+                      layer_pattern=("encoder",), vocab_pad_multiple=16)
+    params = init_lm_params(enc, KEY)
+    with pytest.raises(ValueError, match="no autoregressive serving path"):
+        ServingEngine(enc, params, slots=2, max_seq=48)
 
 
-def test_grouped_fallback_preempts_on_starvation():
-    """The fallback path shares the starvation preemption contract: a
-    queued prompt behind a slot-hogging long decode must preempt it, and
-    the preempted request must resume bit-exactly (offload/restore of
-    rolling-window caches included)."""
+def test_rolling_window_preempts_across_ring_wrap():
+    """Starvation preemption on a rolling-window arch, preempted AFTER the
+    ring cursor has wrapped (pos > window at offload): the blob carries
+    full ring rows + pos (the cursor), so the restored request must resume
+    bit-exactly and finish identical to an uninterrupted solo run."""
     cfg = _local_cfg()
     params = init_lm_params(cfg, KEY)
     rng = np.random.default_rng(2)
     p_long = rng.integers(2, cfg.vocab_size, 11).astype(np.int32)
     p_short = rng.integers(2, cfg.vocab_size, 7).astype(np.int32)
     eng = ServingEngine(cfg, params, slots=1, max_seq=96, decode_block=2,
-                        preempt_after=2)
-    assert not eng.chunked
+                        chunk_size=8, preempt_after=2)
     eng.submit(Request(rid=0, prompt=p_long, max_new=40))
     eng.submit(Request(rid=1, prompt=p_short, max_new=6))
     done = {r.rid: r for r in eng.run()}
     assert eng.stats["preemptions"] >= 1
     assert eng.stats["restores"] == eng.stats["preemptions"]
+    # prompt len 11 > window 8: the cursor had wrapped before any preempt
+    assert done[0].preemptions >= 1 and done[0].resume_pos > 8
     np.testing.assert_array_equal(np.asarray(done[0].out[:40]),
                                   _solo(cfg, params, p_long, 96, 40))
     np.testing.assert_array_equal(np.asarray(done[1].out[:6]),

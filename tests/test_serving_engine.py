@@ -54,16 +54,16 @@ def test_late_admitted_slots_match_solo_decode():
 
 
 def test_admission_reuses_templates(monkeypatch):
-    """Admission must not allocate a fresh full cache per request: template
-    cache allocations are bounded by the retained sizes {1, slots}, however
-    many requests flow through."""
-    import repro.serving.engine as engine_mod
+    """Admission must not allocate a fresh full cache per request: the
+    chunked-prefill group templates are bounded by the retained batch
+    sizes {1, slots}, however many requests flow through."""
+    import repro.serving.prefill as prefill_mod
     cfg = _cfg()
     params = init_lm_params(cfg, KEY)
     eng = ServingEngine(cfg, params, slots=2, max_seq=48, decode_block=4)
     calls = []
-    real_init = engine_mod.init_lm_cache
-    monkeypatch.setattr(engine_mod, "init_lm_cache",
+    real_init = prefill_mod.init_lm_cache
+    monkeypatch.setattr(prefill_mod, "init_lm_cache",
                         lambda *a, **kw: (calls.append(a), real_init(*a, **kw))[1])
     rng = np.random.default_rng(0)
     for i in range(6):
@@ -76,7 +76,9 @@ def test_admission_reuses_templates(monkeypatch):
     # 6 admissions, but at most one allocation per retained template size
     assert len(calls) <= 2, f"per-admission allocation crept back: {calls}"
     # and the template objects are literally reused
-    assert eng._template(1) is eng._template(1)
+    ch = eng._chunked_prefill
+    for batch in ch._templates:
+        assert ch._template(batch) is ch._template(batch)
 
 
 def test_max_new_respected_with_blocks():
