@@ -9,7 +9,9 @@
 # the windowed ring-buffer row included — TTFT regression bound,
 # interleaving fairness 1.0), the attention smoke (per-chunk attention
 # time tracks the live prefix under KV bucketing, flash-decode parity,
-# chunked-prefill parity), and the docs freshness check (paths / REPRO_*
+# chunked-prefill parity), the fault smoke (divergence sentinels +
+# periodic checkpointing < 5% overhead on the healthy path, NaN recovery
+# replays bit-identically), and the docs freshness check (paths / REPRO_*
 # vars named in docs/*.md must exist — see docs/CONFIGURATION.md for the
 # thresholds), and fails if any failed (the smokes still run when
 # pre-existing tests fail, so the perf trajectories are always recorded).
@@ -30,8 +32,11 @@ prefill=$?
 python benchmarks/attn_bench.py --smoke
 attn=$?
 
+python benchmarks/decode_bench.py --faults
+faults=$?
+
 python scripts/check_docs.py
 docs=$?
 
-echo "tier1=$tier1 decode_smoke=$smoke prefill_smoke=$prefill attn_smoke=$attn docs_check=$docs"
-exit $(( tier1 || smoke || prefill || attn || docs ))
+echo "tier1=$tier1 decode_smoke=$smoke prefill_smoke=$prefill attn_smoke=$attn fault_smoke=$faults docs_check=$docs"
+exit $(( tier1 || smoke || prefill || attn || faults || docs ))

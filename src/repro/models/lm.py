@@ -241,7 +241,8 @@ def lm_prefill_chunk(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
                      kv_repeat: int = 1, shared_kv_repeat: int = 1,
                      moe_groups: int = 1,
                      kv_bucket: Optional[int] = None,
-                     rope_len: Optional[int] = None) -> Tuple[jax.Array, Any]:
+                     rope_len: Optional[int] = None,
+                     with_sentinel: bool = False):
     """One state-carrying prefill chunk: process ``S`` prompt tokens
     starting at each row's running offset ``cache["pos"]``.
 
@@ -274,8 +275,15 @@ def lm_prefill_chunk(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
     passes its ``max_seq``.  Values at a given position are identical for
     any sufficient table size.
 
+    ``with_sentinel`` (static bool) appends a per-row divergence sentinel
+    to the return: ``ok [B] bool`` is True iff every hidden state of the
+    row's *valid* chunk tokens (and its emitted logits) is finite.  The
+    reduction is fused into the chunk program — no extra dispatch or
+    host sync — and costs O(B*S*D) compares next to the chunk's matmuls.
+
     Returns ``(logits of each row's last valid chunk token [B,1,V],
-    updated cache)`` with ``pos`` advanced by ``lengths``."""
+    updated cache)`` — plus ``ok`` when ``with_sentinel`` — with ``pos``
+    advanced by ``lengths``."""
     _check_kv_bucket(cfg, kv_bucket)
     full_cache = cache
     if kv_bucket is not None:
@@ -303,7 +311,16 @@ def lm_prefill_chunk(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
     new_cache = {"segments": new_segs, "pos": pos + lengths}
     if kv_bucket is not None:
         new_cache = _unslice_kv_cache(full_cache, new_cache)
-    return logits, new_cache
+    if not with_sentinel:
+        return logits, new_cache
+    # divergence sentinel: a row is ok iff all its VALID chunk tokens'
+    # hidden states and its emitted logits are finite (padding rows and
+    # zero-length rows pass vacuously — their garbage is inert by design)
+    ok = jnp.all(jnp.where(chunk_mask[:, :, None], jnp.isfinite(x), True),
+                 axis=(1, 2))
+    ok &= jnp.all(jnp.isfinite(logits[:, 0, :cfg.vocab_size]), axis=-1)
+    ok |= lengths == 0
+    return logits, new_cache, ok
 
 
 def lm_decode_step(cfg: ModelConfig, params, token: jax.Array, cache, *,
@@ -334,8 +351,8 @@ def decode_tokens(cfg: ModelConfig, params, cache, first_token: jax.Array,
                   moe_groups: int = 1, temperature: float = 0.0,
                   rng: Optional[jax.Array] = None,
                   kv_bucket: Optional[int] = None,
-                  rope_len: Optional[int] = None
-                  ) -> Tuple[jax.Array, Any]:
+                  rope_len: Optional[int] = None,
+                  with_sentinel: bool = False):
     """Fused multi-token decode: run ``n`` generation steps inside one
     ``jax.lax.scan``.
 
@@ -353,6 +370,14 @@ def decode_tokens(cfg: ModelConfig, params, cache, first_token: jax.Array,
     attention reads ``kv_bucket`` rows per token instead of ``max_seq``,
     bit-identically (rows of retired slots whose ``pos`` exceeds the bucket
     write nothing and produce finite garbage, as on the full-cache path).
+
+    ``with_sentinel`` (static bool) appends a per-row divergence sentinel:
+    ``ok [B] bool``, True iff every step's logits for that row were finite
+    across the whole burst.  The ``isfinite`` reduction rides inside the
+    existing scan carry — zero extra dispatches and zero per-token host
+    syncs; the caller reads it with the same device->host transfer that
+    fetches the tokens.  Returns ``(tokens, cache, ok)`` instead of
+    ``(tokens, cache)``.
     """
     sample = temperature > 0.0
     if sample and rng is None:
@@ -372,19 +397,26 @@ def decode_tokens(cfg: ModelConfig, params, cache, first_token: jax.Array,
         return nxt.astype(jnp.int32)[:, None]              # [B, 1]
 
     def step(carry, key):
-        tok, c = carry
+        tok, c, ok = carry
         logits, c = lm_decode_step(cfg, params, tok, c, kv_repeat=kv_repeat,
                                    shared_kv_repeat=shared_kv_repeat,
                                    moe_groups=moe_groups, rope_len=rope_len)
+        if with_sentinel:
+            # fold the finiteness reduction into the scan carry: one AND
+            # per step on device, surfaced with the tokens' transfer
+            ok &= jnp.all(jnp.isfinite(logits[:, 0, :cfg.vocab_size]), -1)
         nxt = select(logits, key)
-        return (nxt, c), nxt[:, 0]
+        return (nxt, c, ok), nxt[:, 0]
 
     # keys are presplit outside the scan; greedy mode carries none at all
     keys = jax.random.split(rng, n) if sample else None
-    (_, cache), toks = jax.lax.scan(
-        step, (first_token.astype(jnp.int32), cache), keys, length=n)
+    ok0 = jnp.ones((first_token.shape[0],), bool)
+    (_, cache, ok), toks = jax.lax.scan(
+        step, (first_token.astype(jnp.int32), cache, ok0), keys, length=n)
     if kv_bucket is not None:
         cache = _unslice_kv_cache(full_cache, cache)
+    if with_sentinel:
+        return toks.T, cache, ok                           # [B, n], ..., [B]
     return toks.T, cache                                   # [B, n]
 
 

@@ -10,9 +10,22 @@ Offload blobs always carry FULL cache rows plus the slot's ``pos`` entry.
 i holds the token with ``pos % window == i``), so a preempted request
 restores bit-exactly even when the engine preempts it mid-window-wrap or
 resumes it under a different KV bucket.
+
+Integrity: blobs carry a ``__meta__`` record — a per-key crc32 of the
+payload bytes (bounded to the live prefix for attention KV leaves, whose
+tail rows are zeros by construction and masked on read — see
+:func:`_live_rows`), a per-key schema (shape + dtype), and a single crc32
+fingerprint over the schema.  :func:`restore_slot` validates the key set
+against the slot template (reporting the FULL missing/extra diff), then
+each key's schema and checksum, and raises
+:class:`repro.serving.faults.CacheCorruption` naming the offending key —
+a bit-flipped or truncated preemption/checkpoint blob can never be
+scattered silently into a live continuous-batching group.
 """
 from __future__ import annotations
 
+import json
+import zlib
 from typing import Any, Dict, Tuple
 
 import jax
@@ -21,6 +34,10 @@ import numpy as np
 
 from repro.core.config import ModelConfig
 from repro.core.memmodel import kv_cache_bytes, ssm_state_bytes
+from repro.serving.faults import CacheCorruption
+
+#: Reserved blob key holding the JSON integrity record (not a cache leaf).
+BLOB_META_KEY = "__meta__"
 
 
 def cache_bytes(cfg: ModelConfig, batch: int, max_seq: int) -> int:
@@ -37,7 +54,16 @@ def max_slots(cfg: ModelConfig, max_seq: int, hbm_budget: float,
 
 
 def extract_slot(cache: Any, b: int) -> Any:
-    """Pull slot b out of a batched cache as a batch-1 cache (host copy)."""
+    """Pull slot b out of a batched cache as a batch-1 cache (host copy).
+
+    Jitted (slot index traced): one dispatch for the whole pytree instead
+    of one eager slice per leaf — periodic checkpointing calls this on
+    the serving hot path, where per-leaf dispatch overhead dominated."""
+    return _extract_slot_jit(cache, jnp.asarray(b, jnp.int32))
+
+
+@jax.jit
+def _extract_slot_jit(cache: Any, b: jax.Array) -> Any:
     def pick(leaf):
         if leaf.ndim == 0:
             return leaf
@@ -62,24 +88,168 @@ def insert_slot(cache: Any, one: Any, b: int) -> Any:
     return {"segments": segs, "pos": pos}
 
 
-def offload_slot(cache: Any, b: int) -> Dict[str, np.ndarray]:
-    """Host-offload one slot (preempted request) as numpy arrays."""
-    one = extract_slot(cache, b)
-    out = {}
+def _blob_schema(arrays: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    return {k: [list(a.shape), str(a.dtype)]
+            for k, a in sorted(arrays.items())}
+
+
+def _schema_fingerprint(schema: Dict[str, Any]) -> str:
+    return f"{zlib.crc32(json.dumps(schema, sort_keys=True).encode()):08x}"
+
+
+def _payload_crc(a: np.ndarray) -> int:
+    # buffer protocol, no tobytes() copy: checkpointing crc's every live
+    # slot's full cache rows on the serving hot path
+    return zlib.crc32(np.ascontiguousarray(a).reshape(-1).view(np.uint8))
+
+
+def _live_rows(out: Dict[str, np.ndarray], pos: int) -> Dict[str, int]:
+    """Which blob keys get prefix-bounded checksums, and how many rows.
+
+    Attention KV leaves (``.../attn/k|v``, row axis 2 after slot slicing)
+    are zero past the slot's live prefix by construction — rows are only
+    ever written at ``pos`` and reads are masked to ``valid_len`` — so a
+    checksum over the first ``min(pos, rows)`` rows covers every byte
+    that can ever influence a restored slot's output.  Checkpointing
+    crc's every live slot on the serving hot path; bounding the
+    checksummed bytes to the live prefix is the same trick the KV bucket
+    ladder plays on attention reads."""
+    live: Dict[str, int] = {}
+    for k, a in out.items():
+        if (k.endswith(("attn/k", "attn/v")) and a.ndim > 2
+                and 0 <= pos < a.shape[2]):
+            live[k] = pos
+    return live
+
+
+def _payload_crc_live(a: np.ndarray, rows) -> int:
+    if rows is None:
+        return _payload_crc(a)
+    return _payload_crc(np.ascontiguousarray(a[:, :, :rows]))
+
+
+def _finalize_blob(out: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    pos = int(out["pos"][0]) if "pos" in out else -1
+    live = _live_rows(out, pos)
+    schema = _blob_schema(out)
+    blob: Dict[str, Any] = dict(out)
+    meta = {
+        "schema": schema,
+        "fingerprint": _schema_fingerprint(schema),
+        "crc": {k: _payload_crc_live(a, live.get(k))
+                for k, a in out.items()},
+    }
+    if live:
+        meta["live"] = live
+    blob[BLOB_META_KEY] = json.dumps(meta)
+    return blob
+
+
+def offload_slot(cache: Any, b: int) -> Dict[str, Any]:
+    """Host-offload one slot (preempted request / periodic checkpoint) as
+    numpy arrays, plus a ``__meta__`` integrity record (per-key crc32 +
+    schema fingerprint) that :func:`restore_slot` validates."""
+    one = jax.device_get(extract_slot(cache, b))   # one batched transfer
+    out: Dict[str, Any] = {}
     for path, leaf in jax.tree_util.tree_leaves_with_path(one):
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
-        out[key] = np.asarray(jax.device_get(leaf))
-    return out
+        out[key] = np.asarray(leaf)
+    return _finalize_blob(out)
 
 
-def restore_slot(cache: Any, blob: Dict[str, np.ndarray], b: int) -> Any:
-    """Re-admit a previously offloaded slot."""
+def offload_slots(cache: Any, bs) -> Dict[int, Dict[str, Any]]:
+    """Host-offload SEVERAL slots at once (the periodic checkpoint path):
+    one ``device_get`` of the whole cache, then per-slot numpy slicing on
+    the host — per-leaf dispatch/transfer overhead is paid once for the
+    batch instead of once per slot.  Each returned blob is bit-identical
+    to an :func:`offload_slot` call for the same slot (same keys, same
+    ``__meta__`` record), so restore/validate treat them identically."""
+    host = jax.device_get(cache)
+    leaves = jax.tree_util.tree_leaves_with_path(host)
+    keyed = []
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        keyed.append((key, np.asarray(leaf)))
+    blobs: Dict[int, Dict[str, Any]] = {}
+    for b in bs:
+        out: Dict[str, np.ndarray] = {}
+        for key, arr in keyed:
+            if key == "pos":                     # [B]: batch on axis 0
+                out[key] = arr[b:b + 1].copy()
+            elif arr.ndim == 0:
+                out[key] = arr
+            else:                                # [n_rep, B, ...]
+                out[key] = arr[:, b:b + 1].copy()
+        blobs[b] = _finalize_blob(out)
+    return blobs
+
+
+def validate_blob(blob: Dict[str, Any], template_keys,
+                  rid=None) -> Dict[str, np.ndarray]:
+    """Check a blob's key set against ``template_keys`` and its payload
+    against its own ``__meta__`` record.  Returns the payload dict (meta
+    stripped); raises :class:`CacheCorruption` on the first violation —
+    key-set mismatches report the full missing/extra diff, schema and
+    checksum mismatches name the offending key."""
+    data = {k: v for k, v in blob.items() if k != BLOB_META_KEY}
+    got, want = set(data), set(template_keys)
+    if got != want:
+        missing = sorted(want - got)
+        extra = sorted(got - want)
+        raise CacheCorruption(
+            "blob key set does not match the slot template: "
+            f"missing={missing or '[]'} extra={extra or '[]'}", rid=rid)
+    meta_raw = blob.get(BLOB_META_KEY)
+    if meta_raw is None:
+        return data                  # legacy blob: key-set check only
+    try:
+        meta = json.loads(meta_raw)
+        schema, crcs = meta["schema"], meta["crc"]
+        fingerprint = meta["fingerprint"]
+        live = meta.get("live", {})
+    except (ValueError, KeyError, TypeError) as e:
+        raise CacheCorruption(f"unreadable blob __meta__ record: {e}",
+                              rid=rid) from None
+    if fingerprint != _schema_fingerprint(schema):
+        raise CacheCorruption("blob schema fingerprint mismatch "
+                              f"(recorded {fingerprint})", rid=rid)
+    for k in sorted(data):
+        a = data[k]
+        decl = schema.get(k)
+        if decl is None or decl != [list(a.shape), str(a.dtype)]:
+            raise CacheCorruption(
+                f"schema mismatch: got {a.shape}/{a.dtype}, blob declares "
+                f"{decl}", rid=rid, key=k)
+        rows = live.get(k)
+        if rows is not None and not (
+                a.ndim > 2 and 0 <= int(rows) < a.shape[2]):
+            raise CacheCorruption(
+                f"blob declares live-prefix crc over {rows} rows, which "
+                f"does not fit shape {a.shape}", rid=rid, key=k)
+        if _payload_crc_live(a, rows) != crcs.get(k):
+            raise CacheCorruption("payload crc32 mismatch", rid=rid, key=k)
+    return data
+
+
+def restore_slot(cache: Any, blob: Dict[str, Any], b: int,
+                 rid=None) -> Any:
+    """Re-admit a previously offloaded slot.  The blob is validated first
+    (:func:`validate_blob`): a malformed or bit-flipped blob raises
+    :class:`CacheCorruption` describing exactly what is wrong instead of
+    a bare ``KeyError`` / silent garbage scatter."""
     one = extract_slot(cache, b)   # template structure
     leaves = jax.tree_util.tree_leaves_with_path(one)
     keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                      for p in path) for path, _ in leaves]
-    vals = [jnp.asarray(blob[k]) for k in keys]
+    data = validate_blob(blob, keys, rid=rid)
+    for k, (_, tmpl) in zip(keys, leaves):
+        if tuple(data[k].shape) != tuple(tmpl.shape):
+            raise CacheCorruption(
+                f"blob leaf shape {data[k].shape} does not fit the slot "
+                f"template {tuple(tmpl.shape)}", rid=rid, key=k)
+    vals = [jnp.asarray(data[k]) for k in keys]
     treedef = jax.tree_util.tree_structure(one)
     restored = jax.tree_util.tree_unflatten(treedef, vals)
     return insert_slot(cache, restored, b)

@@ -1,5 +1,6 @@
 """Serving runtime: prefill / decode step builders + a slot-based batch
-engine (continuous batching with interleaved chunked prefill).
+engine (continuous batching with interleaved chunked prefill and a
+fault-tolerance layer).
 
 ``serve_step`` (the decode shape lowered by the dry-run) is one new token
 against a KV/state cache of the workload's seq_len, exactly per the
@@ -24,14 +25,32 @@ monolithic O(L) prefill.  Rolling-window layers prefill into their
 ring-buffer caches chunk-by-chunk (modular scatter + ring-unrolling
 mask); there is no separate one-shot admission pipeline anymore.  When
 the queue is starved of slots, the engine preempts the live slot with
-the most remaining decode work (host offload via
-:mod:`repro.serving.cache` — the ring cursor travels inside the offloaded
-``pos``) and restores it once a slot frees up.
+the most deadline *slack* (infinite for deadline-less requests, which
+fall back to max-remaining-decode) — host offload via
+:mod:`repro.serving.cache`, the ring cursor travelling inside the
+offloaded ``pos`` — and restores it once a slot frees up.
+
+Fault tolerance (:mod:`repro.serving.faults` is the taxonomy): every
+request ends in a structured terminal state (``ok`` / ``failed`` /
+``cancelled`` / ``timed_out``) on :attr:`ServingEngine.finished` — a
+faulted request is quarantined and reported, never crashing the engine
+or stranding its co-batched neighbours.  Decode bursts and prefill
+chunks carry per-row on-device finiteness sentinels; a tripped slot is
+restored from its last good checkpoint blob (periodic ``offload_slot``
+every ``checkpoint_every`` bursts) and replayed once before failing with
+``DivergenceDetected``.  Offload blobs are crc32/schema-validated on
+restore (``CacheCorruption``), deadlines are enforced at admission and
+in flight (``DeadlineExceeded``), and a no-progress watchdog
+(``SlotStalled`` after ``stall_after`` zero-token iterations with work
+queued) plus ``run(max_iters=...)`` bound the host loop.  All of it is
+exercised deterministically via :mod:`repro.serving.fault_inject`
+(``REPRO_FAULT_SPEC``).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +62,11 @@ from repro.models.lm import (decode_tokens, init_lm_cache, lm_decode_step,
                              lm_forward, lm_prefill)
 from repro.serving.bucketing import (kv_cache_extent, rope_len_for,
                                      select_kv_bucket)
-from repro.serving.cache import offload_slot, restore_slot
+from repro.serving.cache import offload_slot, offload_slots, restore_slot
+from repro.serving.fault_inject import FaultPlan, poison_slot
+from repro.serving.faults import (CacheCorruption, DeadlineExceeded,
+                                  DivergenceDetected, RequestError,
+                                  SlotStalled)
 from repro.serving.prefill import ChunkedPrefill, supports_chunked_prefill
 
 
@@ -74,16 +97,19 @@ def make_decode_tokens(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
 
     ``rope_len`` (static) sizes the rope tables past the cache extent —
     rolling-window caches span only their window, but decode positions run
-    to the serving ``max_seq``."""
+    to the serving ``max_seq``.  ``with_sentinel`` (static) appends the
+    per-row finiteness flag to the return."""
     kv_repeat = plan.kv_repeat if plan else 1
     moe_groups = plan.moe_groups if plan else 1
 
     def decode_n(params, cache, first_token, n: int,
                  kv_bucket: Optional[int] = None,
-                 rope_len: Optional[int] = None):
+                 rope_len: Optional[int] = None,
+                 with_sentinel: bool = False):
         return decode_tokens(cfg, params, cache, first_token, n,
                              kv_repeat=kv_repeat, moe_groups=moe_groups,
-                             kv_bucket=kv_bucket, rope_len=rope_len)
+                             kv_bucket=kv_bucket, rope_len=rope_len,
+                             with_sentinel=with_sentinel)
 
     return decode_n
 
@@ -129,13 +155,23 @@ class Request:
     rid: int
     prompt: np.ndarray            # [S] int32
     max_new: int
+    deadline_ms: Optional[float] = None   # TTL from submit; None = no SLO
     out: List[int] = field(default_factory=list)
     done: bool = False
+    status: str = "pending"       # terminal: ok/failed/cancelled/timed_out
+    error: Optional[RequestError] = None
+    submit_t: float = 0.0         # engine clock at submit (deadline base)
     # preemption state (set when the engine offloads this request's slot)
-    blob: Optional[Dict[str, np.ndarray]] = None
+    blob: Optional[Dict[str, Any]] = None
     next_token: int = 0
     resume_pos: int = 0
     preemptions: int = 0
+    # last-good checkpoint (divergence replay target)
+    ckpt_blob: Optional[Dict[str, Any]] = None
+    ckpt_token: int = 0
+    ckpt_pos: int = 0
+    ckpt_out: int = 0
+    replays: int = 0
 
 
 def _scatter_group(batch_cache, src_cache, dst: jax.Array):
@@ -185,16 +221,48 @@ class ServingEngine:
 
     When queued prompts are starved (no slot has freed for
     ``preempt_after`` iterations and no prefill is in flight), the live
-    slot with the most remaining decode work is offloaded to host memory
-    and requeued; it is restored — states, next token, position (which
-    doubles as the rolling ring cursor: slot i of a rolling cache holds
-    the token with ``pos % window == i``) — once a slot frees, and
-    resumes exactly where it stopped.
+    slot with the most deadline slack — estimated finish margin under the
+    EWMA per-token latency; deadline-less slots rank as infinite slack
+    and tie-break on max remaining decode work — is offloaded to host
+    memory and requeued; it is restored bit-exactly once a slot frees.
+
+    Failure handling (every knob below; taxonomy in
+    :mod:`repro.serving.faults`):
+
+    * ``sentinel`` — per-row on-device finiteness flags ride inside the
+      decode scan and each prefill chunk.  A tripped decode row is
+      restored from its last checkpoint and replayed once (bit-identical
+      on transient faults), then failed with ``DivergenceDetected``; a
+      tripped prefill row is quarantined out of its group.
+    * ``checkpoint_every`` — every N engine iterations each live slot is
+      offloaded as its replay target (plus once at admission); ``0``
+      disables checkpointing (divergence then fails without replay).
+    * ``Request.deadline_ms`` — TTL from submit.  Queued, mid-prefill and
+      mid-decode expiries are cancelled (``timed_out``) and their slots
+      reclaimed; admission rejects (``cancelled``) requests whose
+      estimated latency (EWMA-tracked in ``stats``) exceeds the budget.
+    * ``stall_after`` — no-progress watchdog: after N iterations with
+      zero decoded tokens, no prefill progress and work still queued, the
+      stranded requests fail with ``SlotStalled`` instead of hanging the
+      host loop; :meth:`run` additionally takes ``max_iters``.
+    * ``fault_plan`` — deterministic fault injection
+      (:mod:`repro.serving.fault_inject`; defaults to the
+      ``REPRO_FAULT_SPEC`` env plan) poking NaNs, blob bit-flips and
+      prefill stalls at exact points so every path above is testable.
+
+    Co-batch isolation invariant: rows are independent across the batch
+    dim in every kernel, quarantine restores full slot rows, and failed
+    slots are fully overwritten at re-admission — so a healthy request
+    decodes bit-identically whether or not a neighbour slot faulted.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int, max_seq: int,
                  plan: Optional[ShardingPlan] = None, decode_block: int = 8,
-                 chunk_size: Optional[int] = None, preempt_after: int = 4):
+                 chunk_size: Optional[int] = None, preempt_after: int = 4,
+                 checkpoint_every: int = 8, stall_after: int = 32,
+                 sentinel: bool = True,
+                 fault_plan: Optional[FaultPlan] = None,
+                 clock: Optional[Callable[[], float]] = None):
         if not supports_chunked_prefill(cfg):
             raise ValueError(
                 f"{cfg.name}: no autoregressive serving path (encoder / "
@@ -209,11 +277,18 @@ class ServingEngine:
         self.cache = init_lm_cache(cfg, slots, max_seq, kv_repeat=kv_repeat)
         self._decode_n = jax.jit(make_decode_tokens(cfg, plan),
                                  static_argnames=("n", "kv_bucket",
-                                                  "rope_len"))
+                                                  "rope_len",
+                                                  "with_sentinel"))
         self._scatter = jax.jit(_scatter_group)
         self.kv_repeat = kv_repeat
         self.chunk_size = chunk_size or min(256, max_seq)
         self.preempt_after = preempt_after
+        self.checkpoint_every = int(checkpoint_every)
+        self.stall_after = int(stall_after)
+        self.sentinel = bool(sentinel)
+        self.faults = fault_plan if fault_plan is not None \
+            else FaultPlan.from_env()
+        self._clock = clock or time.monotonic
         # bucket-ladder top: the model's largest KV extent (window-capped
         # for rolling archs); None = no KV cache worth bucketing
         self.kv_extent = kv_cache_extent(cfg, max_seq)
@@ -221,11 +296,12 @@ class ServingEngine:
         self.rope_len = rope_len_for(cfg, max_seq)
         self._chunked_prefill = ChunkedPrefill(
             cfg, params, max_seq=max_seq, chunk_size=self.chunk_size,
-            plan=plan)
+            plan=plan, sentinel=self.sentinel, fault_plan=self.faults)
         # slots reserved for the in-flight prefill group: row i of the
         # group lands in slot _pending[i][0] when its prompt completes
         self._pending: List[Tuple[int, Request]] = []
         self._starved = 0
+        self._no_progress = 0
         self.live: List[Optional[Request]] = [None] * slots
         self.tokens = np.zeros((slots, 1), np.int32)
         self.pos = np.zeros((slots,), np.int64)
@@ -233,14 +309,21 @@ class ServingEngine:
         self.finished: List[Request] = []
         self.stats = {"iters": 0, "decode_tokens": 0, "prefill_chunks": 0,
                       "preemptions": 0, "restores": 0,
-                      "interleave_iters": 0, "interleave_decode_iters": 0}
+                      "interleave_iters": 0, "interleave_decode_iters": 0,
+                      "checkpoints": 0, "ckpt_ms": 0.0, "divergences": 0,
+                      "replays": 0, "failures": 0, "timeouts": 0,
+                      "cancelled": 0, "watchdog_trips": 0,
+                      "ewma_tpot_ms": 0.0, "ewma_prefill_tok_ms": 0.0}
         # distinct KV buckets the decode loop has run in (bounded by the
         # bucket ladder — observability for the compile-count discipline)
         self.buckets_used: set = set()
+        self._prefill_timed = False
 
     def submit(self, req: Request) -> None:
         # validate here, before admission can pop the request and reserve
-        # slots: a mid-group failure would strand co-batched requests
+        # slots: a mid-group failure would strand co-batched requests.
+        # Submit-time ValueErrors are CALLER bugs and raise; in-flight
+        # faults never do — they land on Request.status/.error instead.
         if len(req.prompt) == 0:
             raise ValueError(f"rid={req.rid}: empty prompt")
         # decode room is max_seq - 1 - pos, so a prompt needs at least two
@@ -249,23 +332,100 @@ class ServingEngine:
             raise ValueError(
                 f"rid={req.rid}: prompt length {len(req.prompt)} exceeds "
                 f"max_seq-2 ({self.max_seq - 2}); no room to decode")
+        p = np.asarray(req.prompt)
+        if not np.issubdtype(p.dtype, np.integer):
+            raise ValueError(f"rid={req.rid}: prompt dtype {p.dtype} is not "
+                             "an integer token array")
+        lo, hi = int(p.min()), int(p.max())
+        if lo < 0 or hi >= self.cfg.vocab_size:
+            raise ValueError(
+                f"rid={req.rid}: prompt token ids [{lo}, {hi}] fall outside "
+                f"the vocab [0, {self.cfg.vocab_size}) — out-of-vocab ids "
+                "index garbage embedding rows")
+        req.submit_t = self._clock()
         self.queue.append(req)
 
+    # ------------------------------------------------------------ failures
+    def _fail(self, req: Request, status: str,
+              err: Optional[RequestError]) -> None:
+        """Move a request to a non-ok terminal state (never raises)."""
+        req.status = status
+        req.error = err
+        req.done = True
+        req.blob = None
+        req.ckpt_blob = None
+        self.finished.append(req)
+        self.stats[{"failed": "failures", "timed_out": "timeouts",
+                    "cancelled": "cancelled"}[status]] += 1
+
+    def _expired(self, req: Request, now: float) -> bool:
+        return (req.deadline_ms is not None
+                and (now - req.submit_t) * 1e3 > req.deadline_ms)
+
+    def _expire_deadlines(self) -> None:
+        """Cancel queued / mid-prefill / mid-decode requests whose TTL has
+        run out; their slots and group rows are reclaimed immediately."""
+        now = self._clock()
+        for req in [r for r in self.queue if self._expired(r, now)]:
+            self.queue.remove(req)
+            self._fail(req, "timed_out", DeadlineExceeded(
+                "deadline expired while queued "
+                f"({req.deadline_ms:.1f}ms)", rid=req.rid))
+        for row, (b, req) in enumerate(self._pending):
+            if not req.done and self._expired(req, now):
+                self._chunked_prefill.cancel_row(row)
+                self._fail(req, "timed_out", DeadlineExceeded(
+                    "deadline expired mid-prefill "
+                    f"({req.deadline_ms:.1f}ms)", rid=req.rid))
+        for b, req in enumerate(self.live):
+            if req is not None and self._expired(req, now):
+                self.live[b] = None
+                self._fail(req, "timed_out", DeadlineExceeded(
+                    "deadline expired mid-decode after "
+                    f"{len(req.out)} tokens ({req.deadline_ms:.1f}ms)",
+                    rid=req.rid))
+
+    def _admission_estimate_ms(self, req: Request) -> Optional[float]:
+        """Latency estimate from the EWMA trackers; None until measured."""
+        tpot = self.stats["ewma_tpot_ms"]
+        ptok = self.stats["ewma_prefill_tok_ms"]
+        if tpot <= 0.0 and ptok <= 0.0:
+            return None
+        return len(req.prompt) * ptok + req.max_new * tpot
+
     # ----------------------------------------------------------- admission
-    def _restore(self, b: int, req: Request) -> None:
-        """Re-admit a preempted request from its host-offloaded state."""
-        self.cache = restore_slot(self.cache, req.blob, b)
+    def _restore(self, b: int, req: Request) -> bool:
+        """Re-admit a preempted request from its host-offloaded state.
+        A corrupted blob fails the REQUEST (CacheCorruption), not the
+        engine; returns False and leaves the slot free."""
+        try:
+            self.cache = restore_slot(self.cache, req.blob, b, rid=req.rid)
+        except CacheCorruption as e:
+            self._fail(req, "failed", e)
+            return False
         self.tokens[b, 0] = req.next_token
         self.pos[b] = req.resume_pos
         self.live[b] = req
+        # the validated preemption blob doubles as the replay checkpoint
+        req.ckpt_blob = req.blob
+        req.ckpt_token = req.next_token
+        req.ckpt_pos = req.resume_pos
+        req.ckpt_out = len(req.out)
         req.blob = None
         self.stats["restores"] += 1
+        return True
 
-    def _admit(self) -> None:
-        reserved = {b for b, _ in self._pending}
+    def _admit(self, it: int) -> None:
+        ch = self._chunked_prefill
+        # a group whose every request already reached a terminal state
+        # (deadline sweep, watchdog) is pure inert work: drop it
+        if ch.active and self._pending and all(r.done
+                                               for _, r in self._pending):
+            ch.finish()
+            self._pending = []
+        reserved = {b for b, r in self._pending if not r.done}
         free = [b for b in range(self.slots)
                 if self.live[b] is None and b not in reserved]
-        ch = self._chunked_prefill
         # fill free slots from the queue in order: preempted requests are
         # restored in place (their cache is already prefilled+decoded),
         # fresh prompts accumulate into one mixed-length prefill group
@@ -274,8 +434,23 @@ class ServingEngine:
             req = self.queue[0]
             if req.blob is not None:
                 self.queue.pop(0)
-                self._restore(free.pop(0), req)
+                b = free.pop(0)
+                if self._restore(b, req):
+                    self._progress = True
+                else:
+                    free.insert(0, b)
             elif not ch.active:
+                if req.deadline_ms is not None:
+                    est = self._admission_estimate_ms(req)
+                    left = (req.deadline_ms
+                            - (self._clock() - req.submit_t) * 1e3)
+                    if est is not None and est > left:
+                        self.queue.pop(0)
+                        self._fail(req, "cancelled", DeadlineExceeded(
+                            f"admission reject: estimated {est:.1f}ms "
+                            f"exceeds remaining {left:.1f}ms budget",
+                            rid=req.rid))
+                        continue
                 self.queue.pop(0)
                 fresh.append(req)
                 self._pending.append((free.pop(0), req))
@@ -284,14 +459,29 @@ class ServingEngine:
         if fresh:
             ch.start([r.prompt for r in fresh],
                      batch=self.slots if len(fresh) > 1 else 1)
-        if ch.active:
-            emitted, done = ch.step()
+        stalled = self.faults.active and self.faults.stalled(it)
+        if ch.active and not stalled:
+            t0 = time.perf_counter()
+            emitted, done, diverged = ch.step()
+            dt_ms = (time.perf_counter() - t0) * 1e3
             self._chunk_ran = True
+            self._progress = True
             self.stats["prefill_chunks"] += 1
+            if self._prefill_timed:          # skip each first (compile) call
+                self._ewma("ewma_prefill_tok_ms", dt_ms / ch.chunk)
+            self._prefill_timed = True
+            for row in diverged:
+                b, req = self._pending[row]
+                if not req.done:
+                    self._fail(req, "failed", DivergenceDetected(
+                        "non-finite activations in prefill chunk "
+                        f"{ch._group['idx'] - 1}", rid=req.rid))
             if emitted:
                 dst = np.full((len(self._pending),), -1, np.int32)
                 for row, tok, plen in emitted:
                     b, req = self._pending[row]
+                    if req.done:             # expired/failed while pending
+                        continue
                     dst[row] = b
                     req.out.append(tok)
                     self.tokens[b, 0] = tok
@@ -307,25 +497,45 @@ class ServingEngine:
                 ch.finish()
                 self._pending = []
             self._starved = 0
-        elif self.queue and not free:
+        elif self.queue and not free and not stalled:
             # queue starved: no slot freed and nothing is prefilling
             self._starved += 1
             if self._starved >= self.preempt_after:
                 self._preempt()
-        else:
+        elif not stalled:
             self._starved = 0
 
     def _preempt(self) -> None:
-        """Offload the live slot with the most remaining decode work so a
-        starved queued prompt can take its slot next iteration."""
-        live = [(req.max_new - len(req.out), b)
-                for b, req in enumerate(self.live) if req is not None]
-        if not live:
+        """Offload the live slot with the most deadline slack (estimated
+        finish margin under the EWMA per-token latency) so a starved
+        queued prompt can take its slot next iteration.  Deadline-less
+        slots rank as infinite slack and tie-break on max remaining
+        decode work — the pre-deadline policy, so a deadline-free
+        workload behaves exactly as before."""
+        now = self._clock()
+        tpot = max(self.stats["ewma_tpot_ms"], 0.0)
+        best = None
+        for b, req in enumerate(self.live):
+            if req is None:
+                continue
+            remaining = req.max_new - len(req.out)
+            if req.deadline_ms is None:
+                slack = float("inf")
+            else:
+                slack = (req.deadline_ms - (now - req.submit_t) * 1e3
+                         - remaining * tpot)
+            key = (slack, remaining)
+            if best is None or key > best[0]:
+                best = (key, b)
+        if best is None:
             return
-        _, b = max(live)
+        b = best[1]
         req = self.live[b]
         self.cache = dict(self.cache, pos=jnp.asarray(self.pos, jnp.int32))
-        req.blob = offload_slot(self.cache, b)
+        blob = offload_slot(self.cache, b)
+        if self.faults.active:
+            blob = self.faults.corrupt_blob(req.rid, blob)
+        req.blob = blob
         req.next_token = int(self.tokens[b, 0])
         req.resume_pos = int(self.pos[b])
         req.preemptions += 1
@@ -334,20 +544,131 @@ class ServingEngine:
         self._starved = 0
         self.stats["preemptions"] += 1
 
+    # --------------------------------------------------------- checkpoints
+    def _checkpoint(self, it: int) -> None:
+        """Periodic lightweight checkpointing: offload each live slot as
+        its divergence-replay target.  Runs every ``checkpoint_every``
+        iterations plus once at each request's first burst (so replay is
+        possible before the first periodic tick).  Taken at burst START,
+        where host ``pos``/``tokens`` and device cache rows agree."""
+        if not self.checkpoint_every:
+            return
+        due = it % self.checkpoint_every == 0
+        need = [(b, r) for b, r in enumerate(self.live)
+                if r is not None and (due or r.ckpt_blob is None)]
+        if not need:
+            return
+        t0 = time.perf_counter()
+        self.cache = dict(self.cache, pos=jnp.asarray(self.pos, jnp.int32))
+        # one full-cache transfer for the whole batch of due slots: the
+        # per-leaf dispatch overhead of slot-at-a-time offload dominated
+        # the healthy-path checkpoint cost
+        blobs = offload_slots(self.cache, [b for b, _ in need])
+        for b, req in need:
+            blob = blobs[b]
+            if self.faults.active:
+                blob = self.faults.corrupt_blob(req.rid, blob)
+            req.ckpt_blob = blob
+            req.ckpt_token = int(self.tokens[b, 0])
+            req.ckpt_pos = int(self.pos[b])
+            req.ckpt_out = len(req.out)
+            self.stats["checkpoints"] += 1
+        # observability for the < 5% healthy-path overhead budget: the
+        # fault smoke gates on ckpt_ms / wall time
+        self.stats["ckpt_ms"] += (time.perf_counter() - t0) * 1e3
+
+    def _quarantine(self, b: int, req: Request) -> None:
+        """Divergence sentinel tripped for slot ``b`` this burst: none of
+        the burst's tokens are accepted.  Restore the slot from its last
+        good checkpoint and replay once; on a second trip (or with
+        checkpointing disabled / a corrupt checkpoint) fail the request
+        with ``DivergenceDetected`` — co-batched slots are untouched
+        either way."""
+        self.stats["divergences"] += 1
+        if (self.checkpoint_every and req.ckpt_blob is not None
+                and req.replays < 1):
+            try:
+                self.cache = restore_slot(self.cache, req.ckpt_blob, b,
+                                          rid=req.rid)
+            except CacheCorruption as e:
+                self.live[b] = None
+                self._fail(req, "failed", e)
+                return
+            self.tokens[b, 0] = req.ckpt_token
+            self.pos[b] = req.ckpt_pos
+            del req.out[req.ckpt_out:]
+            req.replays += 1
+            self.stats["replays"] += 1
+        else:
+            self.live[b] = None
+            self._fail(req, "failed", DivergenceDetected(
+                "non-finite logits in decode burst"
+                + (" after checkpoint replay" if req.replays else
+                   " (no checkpoint to replay)"), rid=req.rid))
+
+    # ------------------------------------------------------------ watchdog
+    def _watchdog(self, decoded: int) -> None:
+        waiting = bool(self.queue) or any(not r.done
+                                          for _, r in self._pending)
+        if decoded or self._progress or not waiting:
+            self._no_progress = 0
+            return
+        self._no_progress += 1
+        if self._no_progress < self.stall_after:
+            return
+        self._no_progress = 0
+        self.stats["watchdog_trips"] += 1
+        stuck = [(row, req) for row, (b, req) in enumerate(self._pending)
+                 if not req.done]
+        if stuck:
+            for row, req in stuck:
+                self._chunked_prefill.cancel_row(row)
+                self._fail(req, "failed", SlotStalled(
+                    f"no progress for {self.stall_after} iterations with "
+                    "prefill in flight", rid=req.rid))
+            if self._chunked_prefill.active:
+                self._chunked_prefill.finish()
+            self._pending = []
+        elif self.queue:
+            req = self.queue.pop(0)
+            self._fail(req, "failed", SlotStalled(
+                f"no progress for {self.stall_after} iterations at the "
+                "head of the queue", rid=req.rid))
+
+    def _ewma(self, key: str, sample_ms: float, alpha: float = 0.25) -> None:
+        cur = self.stats[key]
+        self.stats[key] = sample_ms if cur <= 0.0 \
+            else alpha * sample_ms + (1.0 - alpha) * cur
+
+    def _open_pending(self) -> int:
+        return sum(1 for _, r in self._pending if not r.done)
+
     # ------------------------------------------------------------- decode
     def step(self) -> int:
         """One engine iteration: one admission move (prefill chunk /
         restore) interleaved with a ``decode_block`` burst for all live
-        slots.  Returns live + queued + in-prefill."""
+        slots.  Returns live + queued + in-prefill (terminal requests
+        excluded).  Never raises for in-flight faults — failing requests
+        land on :attr:`finished` with a structured status."""
+        it = self.stats["iters"]
         self.stats["iters"] += 1
         self._chunk_ran = False
-        self._admit()
+        self._progress = False
+        self._expire_deadlines()
+        self._admit(it)
         chunk_ran = self._chunk_ran
         if not any(req is not None for req in self.live):
-            return len(self.queue) + len(self._pending)
+            self._watchdog(decoded=0)
+            return len(self.queue) + self._open_pending()
+        self._checkpoint(it)
+        if self.faults.active:
+            for b in self.faults.nan_decode_slots(it):
+                if 0 <= b < self.slots:
+                    self.cache = poison_slot(self.cache, b)
         kblk = self.decode_block
         self.cache = dict(self.cache, pos=jnp.asarray(self.pos, jnp.int32))
         kv_bucket = None
+        fresh_compile = False
         if self.kv_buckets:
             # bound the whole burst's attention to the live prefix: every
             # live slot reads/writes below max(pos) + decode_block, capped
@@ -359,16 +680,37 @@ class ServingEngine:
                         if r is not None]
             kv_bucket = select_kv_bucket(
                 min(max(live_pos) + kblk, self.kv_extent), self.kv_extent)
+            fresh_compile = kv_bucket not in self.buckets_used
             self.buckets_used.add(kv_bucket)
-        toks, self.cache = self._decode_n(self.params, self.cache,
-                                          jnp.asarray(self.tokens), n=kblk,
-                                          kv_bucket=kv_bucket,
-                                          rope_len=self.rope_len)
-        toks = np.asarray(toks)                     # one host sync per block
+        t0 = time.perf_counter()
+        out = self._decode_n(self.params, self.cache,
+                             jnp.asarray(self.tokens), n=kblk,
+                             kv_bucket=kv_bucket, rope_len=self.rope_len,
+                             with_sentinel=self.sentinel)
+        if self.sentinel:
+            toks_d, self.cache, ok_d = out
+            # ONE host sync per block: tokens and sentinel flags fetched
+            # in a single batched transfer, not two round-trips
+            toks, okh = jax.device_get((toks_d, ok_d))
+        else:
+            toks_d, self.cache = out
+            toks = np.asarray(toks_d)
+            okh = None
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        if not fresh_compile and it > 0:
+            # EWMA per-token latency (stats["ewma_tpot_ms"]) feeds the
+            # deadline admission controller; first-compile bursts are
+            # excluded so trace+compile spikes don't poison the estimate
+            self._ewma("ewma_tpot_ms", dt_ms / kblk)
         n_live = 0
         decoded = 0
         for b, req in enumerate(self.live):
             if req is None:
+                continue
+            if okh is not None and not bool(okh[b]):
+                self._quarantine(b, req)
+                if self.live[b] is not None:
+                    n_live += 1
                 continue
             room = min(req.max_new - len(req.out),
                        self.max_seq - 1 - int(self.pos[b]))
@@ -380,6 +722,8 @@ class ServingEngine:
             self.pos[b] += take
             if len(req.out) >= req.max_new or self.pos[b] >= self.max_seq - 1:
                 req.done = True
+                req.status = "ok"
+                req.ckpt_blob = None
                 self.finished.append(req)
                 self.live[b] = None
             else:
@@ -391,9 +735,34 @@ class ServingEngine:
             self.stats["interleave_iters"] += 1
             if decoded:
                 self.stats["interleave_decode_iters"] += 1
-        return n_live + len(self.queue) + len(self._pending)
+        self._watchdog(decoded)
+        return n_live + len(self.queue) + self._open_pending()
 
-    def run(self) -> List[Request]:
-        while self.step() or self.queue or self._pending:
-            pass
+    def run(self, max_iters: Optional[int] = None) -> List[Request]:
+        """Drive :meth:`step` until all work reaches a terminal state.
+        ``max_iters`` is the escape hatch over the watchdog: past it, all
+        in-flight and queued requests are cancelled (``SlotStalled``
+        records the bound) and the engine returns instead of hanging."""
+        while self.step() or self.queue or self._open_pending():
+            if max_iters is not None and self.stats["iters"] >= max_iters:
+                self._abort_inflight("cancelled", SlotStalled(
+                    f"run(max_iters={max_iters}) exhausted with work "
+                    "outstanding"))
+                break
         return self.finished
+
+    def _abort_inflight(self, status: str, err: RequestError) -> None:
+        for req in self.queue:
+            self._fail(req, status, err)
+        self.queue = []
+        for row, (b, req) in enumerate(self._pending):
+            if not req.done:
+                self._chunked_prefill.cancel_row(row)
+                self._fail(req, status, err)
+        if self._chunked_prefill.active:
+            self._chunked_prefill.finish()
+        self._pending = []
+        for b, req in enumerate(self.live):
+            if req is not None:
+                self.live[b] = None
+                self._fail(req, status, err)

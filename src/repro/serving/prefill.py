@@ -88,11 +88,12 @@ def _make_chunk_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
     moe_groups = plan.moe_groups if plan else 1
 
     def chunk_step(params, tokens, lengths, cache, kv_bucket=None,
-                   rope_len=None):
+                   rope_len=None, with_sentinel=False):
         return lm_prefill_chunk(cfg, params, {"tokens": tokens}, cache,
                                 lengths=lengths, kv_repeat=kv_repeat,
                                 moe_groups=moe_groups, kv_bucket=kv_bucket,
-                                rope_len=rope_len)
+                                rope_len=rope_len,
+                                with_sentinel=with_sentinel)
 
     return chunk_step
 
@@ -113,7 +114,8 @@ def _jitted_chunk_step(cfg: ModelConfig, plan: Optional[ShardingPlan]):
            plan.moe_groups if plan else 1, kdispatch.ring_buckets())
     if key not in _STEP_CACHE:
         _STEP_CACHE[key] = jax.jit(_make_chunk_step(cfg, plan),
-                                   static_argnames=("kv_bucket", "rope_len"))
+                                   static_argnames=("kv_bucket", "rope_len",
+                                                    "with_sentinel"))
     return _STEP_CACHE[key]
 
 
@@ -220,11 +222,20 @@ class ChunkedPrefill:
 
     One group at a time; :meth:`step` advances it by one chunk and reports
     rows whose prompt just completed (see module docstring for the full
-    interleave contract)."""
+    interleave contract).
+
+    ``sentinel`` (default on) folds the per-row finiteness sentinel of
+    :func:`lm_prefill_chunk` into every chunk: rows that turn non-finite
+    are quarantined — their remaining chunks go inert, they never emit —
+    and reported to the engine, which fails the request with
+    ``DivergenceDetected`` while co-batched rows prefill on untouched.
+    ``fault_plan`` (a :class:`repro.serving.fault_inject.FaultPlan`)
+    optionally injects NaN into exact (chunk, row) points for testing."""
 
     def __init__(self, cfg: ModelConfig, params, *, max_seq: int,
                  chunk_size: int = 256,
-                 plan: Optional[ShardingPlan] = None):
+                 plan: Optional[ShardingPlan] = None,
+                 sentinel: bool = True, fault_plan=None):
         if not supports_chunked_prefill(cfg):
             raise ValueError(f"{cfg.name}: architecture does not support "
                              "chunked prefill")
@@ -232,6 +243,8 @@ class ChunkedPrefill:
         self.params = params
         self.max_seq = max_seq
         self.chunk = int(chunk_size)
+        self.sentinel = bool(sentinel)
+        self._faults = fault_plan
         self.kv_repeat = plan.kv_repeat if plan else 1
         # bucket ladder top: the model's largest KV extent — max_seq for
         # append-only caches, the window for rolling ones (O(log window)
@@ -281,18 +294,38 @@ class ChunkedPrefill:
             toks[i, :len(p)] = np.asarray(p, np.int32)
         self._group = {"tokens": toks, "lens": lens, "n_chunks": n_chunks,
                        "idx": 0, "k": k, "emitted": np.zeros(kb, bool),
+                       "bad": np.zeros(kb, bool),
                        "cache": self._template(kb)}
 
-    def step(self) -> Tuple[List[Tuple[int, int, int]], bool]:
+    def cancel_row(self, row: int) -> None:
+        """Withdraw one group row (deadline expiry / engine quarantine):
+        its remaining chunks go inert (zero valid tokens) and it will
+        never emit.  Other rows are untouched; the group keeps running to
+        its original chunk count."""
+        g = self._group
+        if g is None or not (0 <= row < g["lens"].shape[0]):
+            return
+        g["lens"][row] = 0
+        g["emitted"][row] = True
+
+    def step(self) -> Tuple[List[Tuple[int, int, int]], bool, List[int]]:
         """Run ONE chunk for the in-flight group.
 
-        Returns ``(emitted, done)``: ``emitted`` lists
+        Returns ``(emitted, done, diverged)``: ``emitted`` lists
         ``(row, first_token, prompt_len)`` for rows whose prompt completed
         this chunk (their cache rows in :attr:`group_cache` are final and
         ready to scatter); ``done`` is True once every chunk has run —
-        call :meth:`finish` afterwards."""
+        call :meth:`finish` afterwards; ``diverged`` lists rows whose
+        sentinel tripped THIS chunk (already quarantined via
+        :meth:`cancel_row` semantics — the engine owns failing their
+        requests)."""
         g = self._group
         assert g is not None
+        if self._faults is not None and self._faults.active:
+            from repro.serving.fault_inject import poison_slot
+            for r in self._faults.nan_prefill_rows(g["idx"]):
+                if 0 <= r < g["lens"].shape[0]:
+                    g["cache"] = poison_slot(g["cache"], r)
         off, clens, fin = chunk_schedule(g["lens"], self.chunk, g["idx"])
         ctoks = jnp.asarray(g["tokens"][:, off:off + self.chunk])
         # every row's pos <= off, so a bucket covering off + chunk (capped
@@ -302,10 +335,23 @@ class ChunkedPrefill:
                                       self.kv_extent)
                      if self.kv_buckets and kdispatch.prefill_kv_buckets()
                      else None)
-        logits, g["cache"] = self._step(self.params, ctoks,
-                                        jnp.asarray(clens), g["cache"],
-                                        kv_bucket=kv_bucket,
-                                        rope_len=self.rope_len)
+        out = self._step(self.params, ctoks, jnp.asarray(clens), g["cache"],
+                         kv_bucket=kv_bucket, rope_len=self.rope_len,
+                         with_sentinel=self.sentinel)
+        diverged: List[int] = []
+        if self.sentinel:
+            logits, g["cache"], ok = out
+            # one [B]-bool host read per CHUNK (not per token); rows past
+            # the real group and rows already done are vacuously finite
+            bad = ~np.asarray(ok) & ~g["bad"] & ~g["emitted"] & (clens > 0)
+            bad[g["k"]:] = False
+            if bad.any():
+                g["bad"] |= bad
+                for r in np.nonzero(bad)[0]:
+                    diverged.append(int(r))
+                    self.cancel_row(int(r))
+        else:
+            logits, g["cache"] = out
         g["idx"] += 1
         fin &= ~g["emitted"]
         fin[g["k"]:] = False
@@ -316,7 +362,7 @@ class ChunkedPrefill:
             emitted = [(int(r), int(nxt[r]), int(g["lens"][r]))
                        for r in np.nonzero(fin)[0]]
             g["emitted"] |= fin
-        return emitted, g["idx"] >= g["n_chunks"]
+        return emitted, g["idx"] >= g["n_chunks"], diverged
 
     def finish(self) -> None:
         """Retire the completed group (template is reused by the next)."""

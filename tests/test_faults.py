@@ -1,0 +1,416 @@
+"""Fault-tolerance matrix: every injected fault class must end in a
+structured terminal state on ``ServingEngine.finished`` — the engine
+never raises for an in-flight fault, and co-batched healthy requests
+decode BIT-IDENTICALLY whether or not a neighbour slot faulted.
+
+Covers: the ``REPRO_FAULT_SPEC`` grammar, blob integrity (crc32 + schema
+fingerprint + key-set diff), divergence sentinels with checkpoint-replay
+recovery, deadline admission/expiry, slack-based preemption, the
+no-progress watchdog, and ``run(max_iters)``.  The slow sweep runs the
+fault matrix across dense/mamba2/hybrid × ref/interpret backends."""
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import AttnConfig, ModelConfig, SSMConfig
+from repro.kernels import dispatch
+from repro.models.lm import init_lm_cache, init_lm_params
+from repro.serving.cache import (BLOB_META_KEY, offload_slot, restore_slot,
+                                 validate_blob)
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.fault_inject import FaultPlan, parse_spec, poison_slot
+from repro.serving.faults import (TERMINAL_STATES, CacheCorruption,
+                                  DeadlineExceeded, DivergenceDetected,
+                                  RequestError, SlotStalled)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(arch: str) -> ModelConfig:
+    if arch == "dense":
+        return ModelConfig(name="dense", family="dense", n_layers=2,
+                           d_model=64, d_ff=128, vocab_size=97,
+                           attn=AttnConfig(n_heads=4, n_kv_heads=2,
+                                           head_dim=16),
+                           layer_pattern=("dense",), vocab_pad_multiple=16)
+    if arch == "mamba2":
+        return ModelConfig(name="mamba2", family="ssm", n_layers=2,
+                           d_model=64, d_ff=0, vocab_size=97,
+                           ssm=SSMConfig(d_state=16, headdim=16, chunk=8),
+                           layer_pattern=("mamba2",), vocab_pad_multiple=16)
+    assert arch == "hybrid"
+    return ModelConfig(name="hyb", family="hybrid", n_layers=4, d_model=64,
+                       d_ff=0, vocab_size=97,
+                       ssm=SSMConfig(d_state=16, headdim=16, chunk=8),
+                       layer_pattern=("mamba2", "mamba2+shared"),
+                       shared_attn=AttnConfig(n_heads=4, n_kv_heads=4,
+                                              head_dim=16),
+                       shared_attn_d_ff=128, vocab_pad_multiple=16)
+
+
+@lru_cache(maxsize=None)
+def _setup(arch: str):
+    cfg = _cfg(arch)
+    return cfg, init_lm_params(cfg, KEY)
+
+
+def _prompts(cfg, lens=(9, 6), seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, cfg.vocab_size, int(n)).astype(np.int32)
+            for n in lens]
+
+
+def _run(arch, plan=None, *, max_new=8, n_req=2, **kw):
+    """One engine pass: submit ``n_req`` co-batched requests, run to
+    completion, return {rid: Request}.  Never expects the engine to
+    raise, whatever the fault plan does."""
+    cfg, params = _setup(arch)
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_seq", 48)
+    kw.setdefault("decode_block", 4)
+    kw.setdefault("chunk_size", 8)
+    eng = ServingEngine(cfg, params, fault_plan=plan, **kw)
+    for i, p in enumerate(_prompts(cfg, lens=(9, 6, 11)[:n_req])):
+        eng.submit(Request(rid=i, prompt=p, max_new=max_new))
+    eng.run(max_iters=200)
+    done = {r.rid: r for r in eng.finished}
+    assert len(done) == n_req
+    assert all(r.status in TERMINAL_STATES for r in done.values())
+    return done, eng
+
+
+class FakeClock:
+    """Injectable engine clock (seconds, monotonic-shaped)."""
+
+    def __init__(self, tick_ms=0.0):
+        self.t = 0.0
+        self.tick = tick_ms / 1e3
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+# ---------------------------------------------------------------- spec DSL
+
+def test_parse_spec_grammar():
+    cs = parse_spec("nan_decode@iter=7:slot=2,corrupt_blob@rid=r3,"
+                    "stall@iter=12:n=3")
+    assert [c.kind for c in cs] == ["nan_decode", "corrupt_blob", "stall"]
+    assert cs[0].params["iter"] == 7 and cs[0].params["slot"] == 2
+    assert cs[0].params["n"] == 1          # default budget
+    assert cs[1].params["rid"] == 3        # rNN form
+    assert cs[2].params["n"] == 3
+    assert parse_spec("") == []
+
+
+@pytest.mark.parametrize("bad", [
+    "meteor@iter=1",                 # unknown kind
+    "nan_decode",                    # missing required iter=
+    "stall@iter",                    # malformed param (no '=')
+    "nan_decode@iter=x",             # non-integer value
+])
+def test_parse_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_spec(bad)
+
+
+def test_clause_budgets_and_stall_window():
+    plan = FaultPlan.from_spec("nan_decode@iter=2:slot=1,stall@iter=5:n=2")
+    assert plan.nan_decode_slots(1) == []      # before the trigger
+    assert plan.nan_decode_slots(3) == [1]     # fires (>= iter)
+    assert plan.nan_decode_slots(4) == []      # budget n=1 exhausted
+    assert not plan.stalled(4)
+    assert plan.stalled(5) and plan.stalled(6)
+    assert not plan.stalled(7)                 # window [5, 5+2)
+    assert FaultPlan.from_spec("stall@iter=0").stalled(10 ** 6)  # n=-1
+
+
+def test_corrupt_blob_deterministic_and_copying():
+    blob = {"a": np.arange(16, dtype=np.float32),
+            "b": np.ones(4, np.int32)}
+    keep = {k: v.copy() for k, v in blob.items()}
+    p1 = FaultPlan.from_spec("corrupt_blob@rid=r5", seed=11)
+    p2 = FaultPlan.from_spec("corrupt_blob@rid=r5", seed=11)
+    out1, out2 = p1.corrupt_blob(5, blob), p2.corrupt_blob(5, blob)
+    # same seed + rid -> same flipped byte; the input blob is untouched
+    diff = [k for k in blob if not np.array_equal(out1[k], blob[k])]
+    assert len(diff) == 1
+    np.testing.assert_array_equal(out1[diff[0]], out2[diff[0]])
+    for k in blob:
+        np.testing.assert_array_equal(blob[k], keep[k])
+    # a non-matching rid passes through untouched (and spends no budget)
+    assert p1.corrupt_blob(6, blob) is blob
+
+
+def test_poison_slot_hits_one_row_only():
+    cfg, _ = _setup("hybrid")
+    cache = init_lm_cache(cfg, 3, 32)
+    poisoned = poison_slot(cache, 1)
+    for seg in poisoned["segments"]:
+        for leaf in jax.tree_util.tree_leaves(seg):
+            if leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating):
+                assert bool(jnp.all(jnp.isnan(leaf[:, 1])))
+                assert bool(jnp.all(jnp.isfinite(leaf[:, 0])))
+                assert bool(jnp.all(jnp.isfinite(leaf[:, 2])))
+    np.testing.assert_array_equal(np.asarray(poisoned["pos"]),
+                                  np.asarray(cache["pos"]))
+
+
+# ----------------------------------------------------------- blob integrity
+
+def _slot_blob(arch="hybrid"):
+    cfg, _ = _setup(arch)
+    cache = init_lm_cache(cfg, 2, 32)
+    rng = np.random.default_rng(0)
+    segs = [jax.tree_util.tree_map(
+        lambda l: jnp.asarray(rng.normal(size=l.shape), l.dtype)
+        if jnp.issubdtype(l.dtype, jnp.floating) else l, seg)
+        for seg in cache["segments"]]
+    cache = {"segments": segs, "pos": cache["pos"]}
+    return cache, offload_slot(cache, 0)
+
+
+def test_blob_roundtrip_validates():
+    cache, blob = _slot_blob()
+    assert BLOB_META_KEY in blob
+    restored = restore_slot(cache, blob, 1)      # no raise
+    a = jax.tree_util.tree_leaves(restored["segments"])
+    b = jax.tree_util.tree_leaves(cache["segments"])
+    assert any(not np.array_equal(np.asarray(x[:, 1]), np.asarray(y[:, 1]))
+               or True for x, y in zip(a, b))    # structural smoke
+
+
+def test_blob_bitflip_raises_cache_corruption_naming_key():
+    cache, blob = _slot_blob()
+    key = sorted(k for k, v in blob.items()
+                 if isinstance(v, np.ndarray)
+                 and v.dtype.kind == "f" and v.nbytes)[0]
+    arr = blob[key].copy()
+    arr.view(np.uint8).reshape(-1)[3] ^= np.uint8(4)
+    blob[key] = arr
+    with pytest.raises(CacheCorruption) as ei:
+        restore_slot(cache, blob, 1, rid=7)
+    msg = str(ei.value)
+    assert "crc32" in msg and key in msg and "rid=7" in msg
+
+
+def test_blob_keyset_diff_in_message():
+    cache, blob = _slot_blob()
+    victim = next(k for k in blob if k != BLOB_META_KEY)
+    del blob[victim]
+    blob["bogus/leaf"] = np.zeros(3, np.float32)
+    with pytest.raises(CacheCorruption) as ei:
+        restore_slot(cache, blob, 1)
+    msg = str(ei.value)
+    assert victim in msg and "bogus/leaf" in msg
+    assert "missing=" in msg and "extra=" in msg
+
+
+def test_blob_schema_mismatch_raises():
+    cache, blob = _slot_blob()
+    key = next(k for k, v in blob.items()
+               if isinstance(v, np.ndarray) and v.dtype.kind == "f")
+    blob[key] = blob[key].astype(np.float64)     # dtype drift
+    with pytest.raises(CacheCorruption) as ei:
+        validate_blob(blob, [k for k in blob if k != BLOB_META_KEY])
+    assert "schema" in str(ei.value) and key in str(ei.value)
+
+
+def test_legacy_blob_without_meta_still_restores():
+    cache, blob = _slot_blob()
+    del blob[BLOB_META_KEY]
+    restore_slot(cache, blob, 1)                 # key-set check only
+
+
+# -------------------------------------------------------- submit validation
+
+def test_submit_rejects_bad_prompts():
+    cfg, params = _setup("hybrid")
+    eng = ServingEngine(cfg, params, slots=1, max_seq=32)
+    with pytest.raises(ValueError, match="vocab"):
+        eng.submit(Request(rid=0, prompt=np.array([1, cfg.vocab_size],
+                                                  np.int32), max_new=2))
+    with pytest.raises(ValueError, match="vocab"):
+        eng.submit(Request(rid=1, prompt=np.array([-1, 2], np.int32),
+                           max_new=2))
+    with pytest.raises(ValueError, match="integer"):
+        eng.submit(Request(rid=2, prompt=np.array([1.5, 2.0]), max_new=2))
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(Request(rid=3, prompt=np.array([], np.int32), max_new=2))
+    assert not eng.queue                # nothing half-admitted
+
+
+# ------------------------------------------------- divergence + co-batching
+
+def _fault_matrix(arch):
+    """The acceptance matrix for one arch under the active kernel backend:
+    (1) fault-free reference; (2) transient NaN -> checkpoint replay
+    recovers bit-identically; (3) NaN without checkpoints -> structured
+    DivergenceDetected; (4) NaN mid-prefill -> row quarantined.  In every
+    faulted run the co-batched healthy request matches the reference
+    bit-for-bit."""
+    ref, _ = _run(arch, None)
+    assert all(r.status == "ok" for r in ref.values())
+
+    # transient decode NaN + checkpoint replay -> full recovery.  rid=0
+    # (prompt len 9, two chunks) emits at iter 1 into slot 0 and decodes
+    # through iter 2 — the poison must land while the slot is live.
+    plan = FaultPlan.from_spec("nan_decode@iter=2:slot=0")
+    rec, eng = _run(arch, plan, checkpoint_every=2)
+    assert eng.stats["divergences"] == 1 and eng.stats["replays"] == 1
+    for rid, r in rec.items():
+        assert r.status == "ok" and r.error is None
+        assert r.out == ref[rid].out, f"rid={rid} not bit-identical"
+
+    # decode NaN with checkpointing disabled -> structured failure
+    plan = FaultPlan.from_spec("nan_decode@iter=2:slot=0")
+    res, eng = _run(arch, plan, checkpoint_every=0)
+    victims = [r for r in res.values() if r.status == "failed"]
+    assert len(victims) == 1
+    assert isinstance(victims[0].error, DivergenceDetected)
+    assert f"rid={victims[0].rid}" in str(victims[0].error)
+    for r in res.values():
+        if r.status == "ok":
+            assert r.out == ref[r.rid].out
+    assert eng.stats["failures"] == 1
+
+    # prefill NaN -> the poisoned row is quarantined out of its group
+    plan = FaultPlan.from_spec("nan_prefill@chunk=0:row=0")
+    res, eng = _run(arch, plan)
+    assert res[0].status == "failed"
+    assert isinstance(res[0].error, DivergenceDetected)
+    assert not res[0].out                      # never emitted
+    assert res[1].status == "ok" and res[1].out == ref[1].out
+
+
+def test_fault_matrix_hybrid_ref():
+    _fault_matrix("hybrid")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,backend", [
+    ("dense", "ref"), ("mamba2", "ref"),
+    ("dense", "interpret"), ("mamba2", "interpret"),
+    ("hybrid", "interpret"),
+])
+def test_fault_matrix_sweep(arch, backend):
+    with dispatch.use_backend(backend):
+        _fault_matrix(arch)
+
+
+def test_corrupt_preemption_blob_fails_only_victim():
+    """slots=1 forces preemption of rid=0; its offload blob is bit-flipped
+    so the restore must fail rid=0 with CacheCorruption while rid=1 (the
+    request that triggered the starvation) completes bit-identically to
+    its fault-free run."""
+    # checkpointing off so rid=0's ONLY offload is the preemption blob
+    # (the n=1 corruption budget must not be spent on a checkpoint)
+    ref, _ = _run("hybrid", None, n_req=2, slots=1, preempt_after=2,
+                  max_new=12, checkpoint_every=0)
+    plan = FaultPlan.from_spec("corrupt_blob@rid=r0", seed=5)
+    res, eng = _run("hybrid", plan, n_req=2, slots=1, preempt_after=2,
+                    max_new=12, checkpoint_every=0)
+    assert eng.stats["preemptions"] >= 1
+    assert res[0].status == "failed"
+    assert isinstance(res[0].error, CacheCorruption)
+    assert res[1].status == "ok" and res[1].out == ref[1].out
+
+
+# ----------------------------------------------------- deadlines + watchdog
+
+def test_deadline_expires_while_queued():
+    cfg, params = _setup("hybrid")
+    clock = FakeClock()
+    eng = ServingEngine(cfg, params, slots=1, max_seq=48, decode_block=4,
+                        clock=clock)
+    p0, p1 = _prompts(cfg)
+    eng.submit(Request(rid=0, prompt=p0, max_new=4))
+    eng.submit(Request(rid=1, prompt=p1, max_new=4, deadline_ms=5.0))
+    clock.advance_ms(10)                      # r1's TTL burns in the queue
+    done = {r.rid: r for r in eng.run(max_iters=100)}
+    assert done[0].status == "ok"
+    assert done[1].status == "timed_out" and not done[1].out
+    assert isinstance(done[1].error, DeadlineExceeded)
+    assert eng.stats["timeouts"] == 1
+
+
+def test_deadline_expires_mid_decode():
+    cfg, params = _setup("hybrid")
+    clock = FakeClock(tick_ms=1.0)            # 1ms per engine clock read
+    eng = ServingEngine(cfg, params, slots=1, max_seq=256, decode_block=4,
+                        checkpoint_every=0, clock=clock)
+    eng.submit(Request(rid=0, prompt=_prompts(cfg)[0], max_new=200,
+                       deadline_ms=40.0))
+    (req,) = eng.run(max_iters=300)
+    assert req.status == "timed_out"
+    assert isinstance(req.error, DeadlineExceeded)
+    assert req.out and len(req.out) < 200     # made progress, then expired
+
+
+def test_deadline_admission_reject_uses_ewma():
+    cfg, params = _setup("hybrid")
+    eng = ServingEngine(cfg, params, slots=1, max_seq=48, decode_block=4,
+                        clock=FakeClock())
+    eng.stats["ewma_tpot_ms"] = 50.0          # measured: 50ms / token
+    p0, p1 = _prompts(cfg)
+    eng.submit(Request(rid=0, prompt=p0, max_new=8, deadline_ms=10.0))
+    eng.submit(Request(rid=1, prompt=p1, max_new=8))
+    done = {r.rid: r for r in eng.run(max_iters=100)}
+    assert done[0].status == "cancelled"      # 8 * 50ms >> 10ms budget
+    assert "admission reject" in str(done[0].error)
+    assert done[1].status == "ok"
+
+
+def test_preemption_picks_slackest_slot():
+    """With a queued request starving, the deadline-less live slot
+    (infinite slack) must be the preemption victim, not the slot
+    running under a deadline."""
+    cfg, params = _setup("hybrid")
+    p = _prompts(cfg, lens=(6, 6, 6))
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64, decode_block=2,
+                        preempt_after=1)
+    eng.submit(Request(rid=0, prompt=p[0], max_new=6, deadline_ms=60_000.0))
+    eng.submit(Request(rid=1, prompt=p[1], max_new=24))
+    eng.submit(Request(rid=2, prompt=p[2], max_new=4))
+    done = {r.rid: r for r in eng.run(max_iters=200)}
+    assert all(r.status == "ok" for r in done.values())
+    assert done[0].preemptions == 0
+    assert done[1].preemptions >= 1
+    assert eng.stats["preemptions"] >= 1
+
+
+def test_watchdog_trips_on_frozen_prefill():
+    plan = FaultPlan.from_spec("stall@iter=0")     # freeze prefill forever
+    res, eng = _run("hybrid", plan, stall_after=4)
+    assert eng.stats["watchdog_trips"] >= 1
+    for r in res.values():
+        assert r.status == "failed"
+        assert isinstance(r.error, SlotStalled)
+        assert "no progress" in str(r.error)
+
+
+def test_run_max_iters_escape_hatch():
+    plan = FaultPlan.from_spec("stall@iter=0")
+    res, eng = _run("hybrid", plan, stall_after=10 ** 6)   # watchdog muted
+    assert eng.stats["iters"] <= 201
+    for r in res.values():
+        assert r.status == "cancelled"
+        assert isinstance(r.error, SlotStalled)
+        assert "max_iters" in str(r.error)
+
+
+def test_error_hierarchy_and_rid_prefix():
+    for exc in (DeadlineExceeded, DivergenceDetected, SlotStalled,
+                CacheCorruption):
+        assert issubclass(exc, RequestError)
+    e = CacheCorruption("bad payload", rid=3, key="segments/0/k")
+    assert str(e).startswith("rid=3: ")
+    assert "segments/0/k" in str(e)
+    assert str(DivergenceDetected("nan burst")) == "nan burst"
