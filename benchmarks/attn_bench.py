@@ -42,6 +42,7 @@ from repro.models.lm import (decode_tokens, init_lm_cache, init_lm_params,
                              lm_prefill)
 from repro.serving.bucketing import select_kv_bucket
 from repro.serving.prefill import _jitted_chunk_step, chunked_prefill
+from repro.serving.telemetry import operator_costs
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(ROOT, "BENCH_attn.json")
@@ -104,7 +105,16 @@ def bench_chunk_scaling(cfg, max_seq: int, chunk: int, offsets, iters: int):
         print(f"{cfg.name:12s} off={off:6d} bucket={bucket:6d} "
               f"bucketed {1e3 * best_b:7.2f} ms | full(max_seq={max_seq}) "
               f"{1e3 * best_f:7.2f} ms | x{best_f / best_b:.2f}")
-    return rows
+    # static operator attribution of the chunk program at the deepest
+    # offset's rung — the regime where the paper's attention-vs-ssm
+    # operator split is most visible
+    cache = dict(template, pos=jnp.full((1,), offsets[-1], jnp.int32))
+    lowered = step.lower(params, toks, lens, cache, kv_bucket=rows[-1]["bucket"])
+    shares = operator_costs(lowered.compile())
+    print(f"{cfg.name:12s} chunk program @bucket={rows[-1]['bucket']}: "
+          + ", ".join(f"{k}={v['flop_share']:.2f}"
+                      for k, v in shares["by_class"].items()))
+    return rows, shares
 
 
 # ------------------------------------------------------- flash-decode parity
@@ -180,15 +190,22 @@ def main() -> None:
     iters = min(args.iters, 2) if args.smoke else args.iters
 
     scaling = {}
+    op_shares = {}
     for cfg in (_dense_cfg(), _hybrid_cfg()):
-        scaling[cfg.name] = bench_chunk_scaling(cfg, max_seq, chunk,
-                                                offsets, iters)
+        rows, shares = bench_chunk_scaling(cfg, max_seq, chunk,
+                                           offsets, iters)
+        scaling[cfg.name] = rows
+        op_shares[cfg.name] = shares
     parity = bench_decode_parity()
     chunk_par = bench_chunk_parity()
 
+    # compact per-bucket latency view of the scaling rows (rung -> ms)
+    per_bucket = {name: {str(r["bucket"]): r["bucketed_ms"] for r in rows}
+                  for name, rows in scaling.items()}
     record = {"bench": "attn", "smoke": bool(args.smoke),
               "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
               "max_seq": max_seq, "chunk": chunk, "scaling": scaling,
+              "per_bucket_ms": per_bucket, "operator_shares": op_shares,
               "decode_parity_err": parity, "chunk_parity": chunk_par}
     runs = []
     if os.path.exists(OUT_PATH):
@@ -224,6 +241,16 @@ def main() -> None:
                     f"offset {early['offset']} "
                     f"({early['bucketed_ms']:.2f} vs "
                     f"{early['full_ms']:.2f} ms)")
+        for name, shares in op_shares.items():
+            fam = shares["by_class"]
+            total = sum(c["flop_share"] for c in fam.values())
+            if "gemm" not in fam or fam["gemm"]["flop_share"] <= 0.0:
+                failures.append(
+                    f"{name}: chunk program has no gemm attribution "
+                    f"({sorted(fam)})")
+            if not 0.99 <= total <= 1.01:
+                failures.append(
+                    f"{name}: operator flop shares sum to {total:.4f}")
         for name, err in parity.items():
             if err > 2e-4:
                 failures.append(f"flash-decode parity {name}: err {err:.2e}")

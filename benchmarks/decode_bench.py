@@ -254,6 +254,79 @@ def bench_faults(gen_len: int, iters: int) -> dict:
     return row
 
 
+def bench_serving_telemetry(gen_len: int) -> dict:
+    """Per-(phase, KV-bucket) latency records plus static operator-level
+    cost attribution for the compiled decode burst — the paper's operator
+    breakdown (selective-scan share vs gemm share) attached to every
+    decode record so the longitudinal trajectory carries *where* the time
+    went, not just how much.  Runs a short serving window on the hybrid
+    config sized so decode climbs at least one bucket rung, then reads
+    the engine's telemetry table and the top-rung program's flop/byte
+    shares."""
+    from repro.serving.bucketing import select_kv_bucket
+    from repro.serving.engine import Request, ServingEngine
+    from repro.serving.telemetry import operator_costs
+
+    cfg = bench_configs()[2]                    # hybrid: both layer kinds
+    params = init_lm_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(cfg, params, slots=2, max_seq=192 + gen_len,
+                        decode_block=8, chunk_size=32)
+    for i, n in enumerate((40, 24)):
+        prompt = rng.integers(2, cfg.vocab_size, n).astype(np.int32)
+        eng.submit(Request(rid=i, prompt=prompt, max_new=gen_len + 128))
+    eng.run(max_iters=10_000)
+    assert all(r.status == "ok" for r in eng.finished), \
+        [r.status for r in eng.finished]
+
+    bucket = (select_kv_bucket(eng.kv_extent, eng.kv_extent)
+              if eng.kv_buckets else None)
+    lowered = eng._decode_n.lower(
+        eng.params, eng.cache, jnp.asarray(eng.tokens), n=eng.decode_block,
+        kv_bucket=bucket, rope_len=eng.rope_len,
+        with_sentinel=eng.sentinel)
+    shares = operator_costs(lowered.compile())
+    per_bucket = eng.telemetry.latency_snapshot()
+
+    decode_keys = [k for k in per_bucket if k.startswith("decode@")
+                   and not k.endswith("@*")]
+    print(f"telemetry: {len(decode_keys)} decode bucket(s) "
+          f"{sorted(decode_keys)}; top-rung program "
+          f"{shares['flops']:.3g} flops, shares "
+          + ", ".join(f"{k}={v['flop_share']:.2f}"
+                      for k, v in shares["by_class"].items()))
+    return {"per_bucket": per_bucket, "operator_shares": shares}
+
+
+def _gate_telemetry(telem: dict) -> None:
+    """Structural smoke gates on the telemetry record: compile samples
+    segregated per rung (exactly one first-dispatch each), steady samples
+    present, and the operator shares well-formed."""
+    per_bucket = telem["per_bucket"]
+    decode_keys = [k for k in per_bucket if k.startswith("decode@")
+                   and not k.endswith("@*")]
+    if len(decode_keys) < 2:
+        raise SystemExit(
+            f"expected >= 2 decode bucket rungs in telemetry, got "
+            f"{sorted(decode_keys)}")
+    for k in decode_keys:
+        rec = per_bucket[k]
+        if rec["compile"]["count"] != 1 or rec["steady"]["count"] < 1:
+            raise SystemExit(
+                f"{k}: compile/steady segregation broken: {rec}")
+    shares = telem["operator_shares"]["by_class"]
+    if "gemm" not in shares or "ssm" not in shares:
+        raise SystemExit(
+            f"hybrid decode program missing gemm/ssm attribution: "
+            f"{sorted(shares)}")
+    total = sum(c["flop_share"] for c in shares.values())
+    if not 0.99 <= total <= 1.01:
+        raise SystemExit(f"operator flop shares sum to {total:.4f}")
+    print(f"telemetry smoke OK: rungs {sorted(decode_keys)} each with 1 "
+          "compile + >=1 steady sample; operator shares sum to "
+          f"{total:.3f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -306,11 +379,13 @@ def main() -> None:
               f"({row['fused_tok_s']:8.1f} tok/s) | "
               f"speedup {row['speedup']:.2f}x")
 
+    telem = bench_serving_telemetry(gen_len)
     _append_run({"bench": "decode", "smoke": bool(args.smoke),
                  "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
-                 "results": results})
+                 "results": results, "serving_telemetry": telem})
 
     if args.smoke:
+        _gate_telemetry(telem)
         speedups = [r["speedup"] for r in results.values()]
         gmean = float(np.exp(np.mean(np.log(speedups))))
         worst = min(speedups)

@@ -177,6 +177,10 @@ def bench_interleave(long_len: int, chunk: int) -> dict:
         "interleave_iters": st["interleave_iters"],
         "interleave_decode_iters": st["interleave_decode_iters"],
         "fairness": fairness,
+        # per-(phase, KV-bucket) latency table — the long prompt walks the
+        # whole ladder, so this record carries one entry per rung with
+        # compile samples segregated from steady state
+        "per_bucket": eng.telemetry.latency_snapshot(),
     }
 
 

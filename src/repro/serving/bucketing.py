@@ -77,6 +77,21 @@ def select_kv_bucket(needed: int, max_seq: int,
     return max_seq  # pragma: no cover — ladder always ends at max_seq
 
 
+def clamped_bucket(needed: int, extent: Optional[int],
+                   min_bucket: int = MIN_BUCKET) -> Optional[int]:
+    """The rung a program covering ``needed`` KV rows will run under, with
+    ``needed`` capped at the ladder top ``extent`` (the model's largest
+    KV-cache extent from :func:`kv_cache_extent`).  ``None`` extent means
+    the model holds no KV cache — no bucketing, returns ``None``.  One
+    rule for every caller — the engine's decode bursts, the prefill
+    scheduler's chunks, and the telemetry layer's admission estimates —
+    so the latency model is keyed by exactly the buckets the compiled
+    programs actually run under."""
+    if extent is None:
+        return None
+    return select_kv_bucket(min(max(needed, 1), extent), extent, min_bucket)
+
+
 def kv_cache_extent(cfg: ModelConfig, max_seq: int) -> Optional[int]:
     """Largest KV-cache leaf extent the model allocates at ``max_seq`` —
     the bucket-ladder top.  Append-only caches (dense/moe/hybrid/shared

@@ -60,14 +60,15 @@ from repro.core.config import ModelConfig
 from repro.distributed.sharding import ShardingPlan
 from repro.models.lm import (decode_tokens, init_lm_cache, lm_decode_step,
                              lm_forward, lm_prefill)
-from repro.serving.bucketing import (kv_cache_extent, rope_len_for,
-                                     select_kv_bucket)
+from repro.serving.bucketing import (clamped_bucket, kv_cache_extent,
+                                     rope_len_for)
 from repro.serving.cache import offload_slot, offload_slots, restore_slot
 from repro.serving.fault_inject import FaultPlan, poison_slot
 from repro.serving.faults import (CacheCorruption, DeadlineExceeded,
                                   DivergenceDetected, RequestError,
                                   SlotStalled)
 from repro.serving.prefill import ChunkedPrefill, supports_chunked_prefill
+from repro.serving.telemetry import Telemetry
 
 
 def make_prefill_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
@@ -240,7 +241,15 @@ class ServingEngine:
     * ``Request.deadline_ms`` — TTL from submit.  Queued, mid-prefill and
       mid-decode expiries are cancelled (``timed_out``) and their slots
       reclaimed; admission rejects (``cancelled``) requests whose
-      estimated latency (EWMA-tracked in ``stats``) exceeds the budget.
+      estimated latency under the per-(phase, KV-bucket) latency model
+      (:attr:`telemetry`, steady-state samples only — first-dispatch
+      compile spikes are segregated; falls back to the global
+      steady-state EWMAs in ``stats``) exceeds the budget.
+    * ``telemetry`` / ``trace_path`` — the structured metrics + tracing
+      layer (:mod:`repro.serving.telemetry`): per-(phase, bucket)
+      latency records and per-request span traces, JSONL-exported when
+      ``trace_path`` (or ``REPRO_TRACE_PATH``) is set.  All engine
+      timing, deadlines included, reads the one injectable ``clock``.
     * ``stall_after`` — no-progress watchdog: after N iterations with
       zero decoded tokens, no prefill progress and work still queued, the
       stranded requests fail with ``SlotStalled`` instead of hanging the
@@ -262,7 +271,9 @@ class ServingEngine:
                  checkpoint_every: int = 8, stall_after: int = 32,
                  sentinel: bool = True,
                  fault_plan: Optional[FaultPlan] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 telemetry: Optional[Telemetry] = None,
+                 trace_path: Optional[str] = None):
         if not supports_chunked_prefill(cfg):
             raise ValueError(
                 f"{cfg.name}: no autoregressive serving path (encoder / "
@@ -289,6 +300,10 @@ class ServingEngine:
         self.faults = fault_plan if fault_plan is not None \
             else FaultPlan.from_env()
         self._clock = clock or time.monotonic
+        # ALL engine timing — deadlines, dispatch latency, checkpoint cost
+        # — reads this one clock, so fake-clock tests see consistent EWMAs
+        self.telemetry = telemetry if telemetry is not None else Telemetry(
+            clock=self._clock, trace_path=trace_path)
         # bucket-ladder top: the model's largest KV extent (window-capped
         # for rolling archs); None = no KV cache worth bucketing
         self.kv_extent = kv_cache_extent(cfg, max_seq)
@@ -317,7 +332,11 @@ class ServingEngine:
         # distinct KV buckets the decode loop has run in (bounded by the
         # bucket ladder — observability for the compile-count discipline)
         self.buckets_used: set = set()
-        self._prefill_timed = False
+        # decode bucket keys already dispatched (None included, for archs
+        # without KV buckets): the FIRST dispatch per key pays XLA
+        # trace+compile and its latency sample must be segregated from
+        # the steady-state estimates feeding admission and preemption
+        self._decode_seen: set = set()
 
     def submit(self, req: Request) -> None:
         # validate here, before admission can pop the request and reserve
@@ -343,6 +362,10 @@ class ServingEngine:
                 f"the vocab [0, {self.cfg.vocab_size}) — out-of-vocab ids "
                 "index garbage embedding rows")
         req.submit_t = self._clock()
+        self.telemetry.begin_span(req.rid, prompt_len=len(req.prompt),
+                                  max_new=req.max_new,
+                                  deadline_ms=req.deadline_ms,
+                                  t=req.submit_t)
         self.queue.append(req)
 
     # ------------------------------------------------------------ failures
@@ -355,6 +378,9 @@ class ServingEngine:
         req.blob = None
         req.ckpt_blob = None
         self.finished.append(req)
+        self.telemetry.end_span(req.rid, status,
+                                error=str(err) if err else None,
+                                tokens_out=len(req.out))
         self.stats[{"failed": "failures", "timed_out": "timeouts",
                     "cancelled": "cancelled"}[status]] += 1
 
@@ -386,12 +412,25 @@ class ServingEngine:
                     rid=req.rid))
 
     def _admission_estimate_ms(self, req: Request) -> Optional[float]:
-        """Latency estimate from the EWMA trackers; None until measured."""
-        tpot = self.stats["ewma_tpot_ms"]
-        ptok = self.stats["ewma_prefill_tok_ms"]
+        """Latency estimate from the per-(phase, bucket) latency model:
+        prefill cost at the rung covering the prompt, decode cost at the
+        rung the request will finish under (conservative — the deepest
+        bucket it reaches).  Each phase falls back to the phase-global
+        steady-state record, then to the scalar ``stats`` EWMAs (which
+        only ever see steady-state samples); None until anything has
+        been measured."""
+        plen, mnew = len(req.prompt), req.max_new
+        ptok = self.telemetry.estimate(
+            "prefill", clamped_bucket(plen, self.kv_extent))
+        if ptok is None:
+            ptok = self.stats["ewma_prefill_tok_ms"]
+        tpot = self.telemetry.estimate(
+            "decode", clamped_bucket(plen + mnew, self.kv_extent))
+        if tpot is None:
+            tpot = self.stats["ewma_tpot_ms"]
         if tpot <= 0.0 and ptok <= 0.0:
             return None
-        return len(req.prompt) * ptok + req.max_new * tpot
+        return plen * ptok + mnew * tpot
 
     # ----------------------------------------------------------- admission
     def _restore(self, b: int, req: Request) -> bool:
@@ -413,6 +452,7 @@ class ServingEngine:
         req.ckpt_out = len(req.out)
         req.blob = None
         self.stats["restores"] += 1
+        self.telemetry.event(req.rid, "restore", pos=req.resume_pos)
         return True
 
     def _admit(self, it: int) -> None:
@@ -461,18 +501,35 @@ class ServingEngine:
                      batch=self.slots if len(fresh) > 1 else 1)
         stalled = self.faults.active and self.faults.stalled(it)
         if ch.active and not stalled:
-            t0 = time.perf_counter()
+            t0 = self._clock()
             emitted, done, diverged = ch.step()
-            dt_ms = (time.perf_counter() - t0) * 1e3
+            dt_ms = (self._clock() - t0) * 1e3
+            info = ch.last_chunk
             self._chunk_ran = True
             self._progress = True
             self.stats["prefill_chunks"] += 1
-            if self._prefill_timed:          # skip each first (compile) call
-                self._ewma("ewma_prefill_tok_ms", dt_ms / ch.chunk)
-            self._prefill_timed = True
+            # per-token cost over the group's VALID (unmasked) tokens —
+            # dividing by the padded chunk size deflated the estimate on
+            # ragged final chunks — recorded per (phase, bucket) with the
+            # first dispatch of a (batch, bucket) combo segregated as a
+            # compile sample (trace+compile must not poison steady state)
+            if info["valid_tokens"] > 0:
+                tok_ms = dt_ms / info["valid_tokens"]
+                self.telemetry.record_latency(
+                    "prefill", info["bucket"], tok_ms,
+                    compiled=info["fresh_compile"])
+                if not info["fresh_compile"]:
+                    self._ewma("ewma_prefill_tok_ms", tok_ms)
+            for row, (b, req) in enumerate(self._pending):
+                if not req.done and info["valid_per_row"][row]:
+                    self.telemetry.event(
+                        req.rid, "prefill", bucket=info["bucket"],
+                        tokens=int(info["valid_per_row"][row]))
             for row in diverged:
                 b, req = self._pending[row]
                 if not req.done:
+                    self.telemetry.event(req.rid, "fault",
+                                         detail="prefill_divergence")
                     self._fail(req, "failed", DivergenceDetected(
                         "non-finite activations in prefill chunk "
                         f"{ch._group['idx'] - 1}", rid=req.rid))
@@ -507,13 +564,15 @@ class ServingEngine:
 
     def _preempt(self) -> None:
         """Offload the live slot with the most deadline slack (estimated
-        finish margin under the EWMA per-token latency) so a starved
+        finish margin under the per-(phase, bucket) latency model: each
+        slot's remaining decode is costed at the rung it will finish
+        under, falling back to the global steady-state EWMA) so a starved
         queued prompt can take its slot next iteration.  Deadline-less
         slots rank as infinite slack and tie-break on max remaining
         decode work — the pre-deadline policy, so a deadline-free
         workload behaves exactly as before."""
         now = self._clock()
-        tpot = max(self.stats["ewma_tpot_ms"], 0.0)
+        tpot_global = max(self.stats["ewma_tpot_ms"], 0.0)
         best = None
         for b, req in enumerate(self.live):
             if req is None:
@@ -522,6 +581,10 @@ class ServingEngine:
             if req.deadline_ms is None:
                 slack = float("inf")
             else:
+                tpot = self.telemetry.estimate("decode", clamped_bucket(
+                    int(self.pos[b]) + remaining, self.kv_extent))
+                if tpot is None:
+                    tpot = tpot_global
                 slack = (req.deadline_ms - (now - req.submit_t) * 1e3
                          - remaining * tpot)
             key = (slack, remaining)
@@ -539,6 +602,7 @@ class ServingEngine:
         req.next_token = int(self.tokens[b, 0])
         req.resume_pos = int(self.pos[b])
         req.preemptions += 1
+        self.telemetry.event(req.rid, "preempt", pos=int(self.pos[b]))
         self.live[b] = None
         self.queue.append(req)
         self._starved = 0
@@ -558,7 +622,7 @@ class ServingEngine:
                 if r is not None and (due or r.ckpt_blob is None)]
         if not need:
             return
-        t0 = time.perf_counter()
+        t0 = self._clock()
         self.cache = dict(self.cache, pos=jnp.asarray(self.pos, jnp.int32))
         # one full-cache transfer for the whole batch of due slots: the
         # per-leaf dispatch overhead of slot-at-a-time offload dominated
@@ -573,9 +637,10 @@ class ServingEngine:
             req.ckpt_pos = int(self.pos[b])
             req.ckpt_out = len(req.out)
             self.stats["checkpoints"] += 1
+            self.telemetry.event(req.rid, "checkpoint")
         # observability for the < 5% healthy-path overhead budget: the
         # fault smoke gates on ckpt_ms / wall time
-        self.stats["ckpt_ms"] += (time.perf_counter() - t0) * 1e3
+        self.stats["ckpt_ms"] += (self._clock() - t0) * 1e3
 
     def _quarantine(self, b: int, req: Request) -> None:
         """Divergence sentinel tripped for slot ``b`` this burst: none of
@@ -585,6 +650,7 @@ class ServingEngine:
         with ``DivergenceDetected`` — co-batched slots are untouched
         either way."""
         self.stats["divergences"] += 1
+        self.telemetry.event(req.rid, "fault", detail="decode_divergence")
         if (self.checkpoint_every and req.ckpt_blob is not None
                 and req.replays < 1):
             try:
@@ -599,6 +665,7 @@ class ServingEngine:
             del req.out[req.ckpt_out:]
             req.replays += 1
             self.stats["replays"] += 1
+            self.telemetry.event(req.rid, "replay", pos=req.ckpt_pos)
         else:
             self.live[b] = None
             self._fail(req, "failed", DivergenceDetected(
@@ -668,7 +735,6 @@ class ServingEngine:
         kblk = self.decode_block
         self.cache = dict(self.cache, pos=jnp.asarray(self.pos, jnp.int32))
         kv_bucket = None
-        fresh_compile = False
         if self.kv_buckets:
             # bound the whole burst's attention to the live prefix: every
             # live slot reads/writes below max(pos) + decode_block, capped
@@ -678,11 +744,13 @@ class ServingEngine:
             # sensibly nor write at all inside the bucket).
             live_pos = [int(self.pos[b]) for b, r in enumerate(self.live)
                         if r is not None]
-            kv_bucket = select_kv_bucket(
-                min(max(live_pos) + kblk, self.kv_extent), self.kv_extent)
-            fresh_compile = kv_bucket not in self.buckets_used
+            kv_bucket = clamped_bucket(max(live_pos) + kblk, self.kv_extent)
             self.buckets_used.add(kv_bucket)
-        t0 = time.perf_counter()
+        # the first dispatch per bucket key (None included — archs without
+        # KV buckets still compile on their first burst) pays trace+compile
+        fresh_compile = kv_bucket not in self._decode_seen
+        self._decode_seen.add(kv_bucket)
+        t0 = self._clock()
         out = self._decode_n(self.params, self.cache,
                              jnp.asarray(self.tokens), n=kblk,
                              kv_bucket=kv_bucket, rope_len=self.rope_len,
@@ -696,11 +764,15 @@ class ServingEngine:
             toks_d, self.cache = out
             toks = np.asarray(toks_d)
             okh = None
-        dt_ms = (time.perf_counter() - t0) * 1e3
-        if not fresh_compile and it > 0:
-            # EWMA per-token latency (stats["ewma_tpot_ms"]) feeds the
-            # deadline admission controller; first-compile bursts are
-            # excluded so trace+compile spikes don't poison the estimate
+        dt_ms = (self._clock() - t0) * 1e3
+        # per-token latency feeds the deadline admission controller and
+        # preemption slack ordering, keyed by (phase, bucket); the first
+        # dispatch per bucket is tagged a compile sample and segregated —
+        # a bucket-ladder climb must not poison the steady-state estimate
+        # (it used to: fresh_compile was computed but never gated here)
+        self.telemetry.record_latency("decode", kv_bucket, dt_ms / kblk,
+                                      compiled=fresh_compile)
+        if not fresh_compile:
             self._ewma("ewma_tpot_ms", dt_ms / kblk)
         n_live = 0
         decoded = 0
@@ -719,12 +791,16 @@ class ServingEngine:
             decoded += take
             if take:
                 self.tokens[b, 0] = int(toks[b, take - 1])
+                self.telemetry.event(req.rid, "decode", bucket=kv_bucket,
+                                     tokens=take)
             self.pos[b] += take
             if len(req.out) >= req.max_new or self.pos[b] >= self.max_seq - 1:
                 req.done = True
                 req.status = "ok"
                 req.ckpt_blob = None
                 self.finished.append(req)
+                self.telemetry.end_span(req.rid, "ok",
+                                        tokens_out=len(req.out))
                 self.live[b] = None
             else:
                 n_live += 1

@@ -57,8 +57,8 @@ from repro.core.config import ModelConfig
 from repro.distributed.sharding import ShardingPlan
 from repro.kernels import dispatch as kdispatch
 from repro.models.lm import init_lm_cache, lm_prefill_chunk
-from repro.serving.bucketing import (kv_cache_extent, rope_len_for,
-                                     select_kv_bucket)
+from repro.serving.bucketing import (clamped_bucket, kv_cache_extent,
+                                     rope_len_for)
 
 
 def _has_attn_cache(cfg: ModelConfig) -> bool:
@@ -203,10 +203,7 @@ def chunked_prefill(cfg: ModelConfig, params, tokens: jax.Array, cache, *,
             lg, cache = step(params, tokens[:, off:off + chunk_size],
                              jnp.asarray(clens), cache)
         else:
-            bucket = None
-            if kv_extent is not None:
-                bucket = select_kv_bucket(min(off + chunk_size, kv_extent),
-                                          kv_extent)
+            bucket = clamped_bucket(off + chunk_size, kv_extent)
             lg, cache = step(params, tokens[:, off:off + chunk_size],
                              jnp.asarray(clens), cache, kv_bucket=bucket,
                              rope_len=rope_len)
@@ -256,6 +253,16 @@ class ChunkedPrefill:
         self._step = _jitted_chunk_step(cfg, plan)
         self._templates: Dict[int, Any] = {}
         self._group: Optional[Dict[str, Any]] = None
+        # (batch, kv_bucket) combos this scheduler has dispatched: the
+        # first dispatch of a combo pays trace+compile, and the engine's
+        # latency model must segregate that sample from steady state.
+        # (The jitted step cache is process-global, so a second scheduler
+        # instance may tag an already-compiled combo "fresh" — that only
+        # diverts one sample to the compile record, never poisons steady.)
+        self._dispatched: set = set()
+        # facts about the most recent step(), for the engine's telemetry:
+        # {"bucket", "valid_tokens", "valid_per_row", "fresh_compile"}
+        self.last_chunk: Optional[Dict[str, Any]] = None
 
     @property
     def active(self) -> bool:
@@ -331,10 +338,15 @@ class ChunkedPrefill:
         # every row's pos <= off, so a bucket covering off + chunk (capped
         # at the extent ladder's top) bounds all of this chunk's KV reads
         # and writes to the live prefix
-        kv_bucket = (select_kv_bucket(min(off + self.chunk, self.kv_extent),
-                                      self.kv_extent)
+        kv_bucket = (clamped_bucket(off + self.chunk, self.kv_extent)
                      if self.kv_buckets and kdispatch.prefill_kv_buckets()
                      else None)
+        combo = (g["lens"].shape[0], kv_bucket)
+        self.last_chunk = {"bucket": kv_bucket,
+                           "valid_tokens": int(clens.sum()),
+                           "valid_per_row": np.asarray(clens),
+                           "fresh_compile": combo not in self._dispatched}
+        self._dispatched.add(combo)
         out = self._step(self.params, ctoks, jnp.asarray(clens), g["cache"],
                          kv_bucket=kv_bucket, rope_len=self.rope_len,
                          with_sentinel=self.sentinel)

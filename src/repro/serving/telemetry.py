@@ -1,0 +1,259 @@
+"""Structured serving telemetry: the per-(phase, KV-bucket) latency model,
+per-request span traces, and static operator-level cost attribution.
+
+The paper's core contribution is *operator-level* characterization —
+selective-scan kernels account for >55% of edge-inference latency, and
+the Transformer/SSM crossover only shows up when time is attributed per
+phase and per sequence-length regime.  Collapsing the serving engine's
+timing into two scalar EWMAs loses exactly that structure, and worse:
+a first dispatch into a fresh KV bucket pays trace+compile, so an
+unguarded sample poisons the steady-state estimate that deadline
+admission and preemption-victim selection depend on — one bucket-ladder
+climb could spuriously time out every queued request.
+
+This module replaces the scalars with three layers:
+
+* **Latency table** — one :class:`PhaseBucketStats` per
+  ``(phase, kv_bucket)`` key (phases: ``prefill`` / ``decode``; bucket =
+  the static KV rung the compiled program ran under, ``None`` for
+  architectures without a KV cache).  Each entry keeps TWO
+  :class:`LatencyRecord` s — ``steady`` and ``compile`` — so
+  first-dispatch samples are *segregated*, never discarded: the compile
+  record is observability (how much a ladder climb costs), the steady
+  record is the only one feeding scheduling.  :meth:`Telemetry.estimate`
+  answers "expected ms/token for this phase at this bucket" from the
+  bucket's steady record, falling back to the phase-global steady record
+  when the bucket has no samples yet.
+* **Span traces** — per-request event timelines (queued -> prefill
+  chunks -> decode bursts -> terminal state, with bucket, preemption,
+  checkpoint, replay and fault events).  Consecutive same-phase
+  same-bucket events coalesce (a 1000-burst decode is one event with
+  ``bursts``/``tokens`` counters, split whenever the bucket climbs), so
+  spans stay O(ladder rungs), not O(tokens).  When ``REPRO_TRACE_PATH``
+  is set (or ``trace_path`` is passed), each finished span is appended
+  to that file as one JSON line.
+* **Operator attribution** — :func:`operator_costs` maps a compiled XLA
+  program to flop/byte totals (via the version-portable
+  :func:`repro.core.hlo_analysis.xla_cost_dict`) plus per-kernel-family
+  shares (gemm / ssm / norm / memory / arith / collective) from the
+  trip-count-corrected HLO walk — the paper's Table-style operator
+  breakdown, derived statically so benchmarks can report it without a
+  profiler.
+
+All timestamps come from the injected ``clock`` (the engine passes its
+own, so fault-injection tests with a fake clock see one consistent time
+base across deadlines, latency samples and trace spans).
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+# phases a latency key may carry (order = pipeline order)
+PHASES = ("prefill", "decode")
+
+
+@dataclass
+class LatencyRecord:
+    """EWMA + count + min/max over per-token latency samples (ms)."""
+
+    ewma_ms: float = 0.0
+    count: int = 0
+    min_ms: float = float("inf")
+    max_ms: float = 0.0
+
+    def observe(self, ms: float, alpha: float) -> None:
+        self.ewma_ms = ms if self.count == 0 \
+            else alpha * ms + (1.0 - alpha) * self.ewma_ms
+        self.count += 1
+        self.min_ms = min(self.min_ms, ms)
+        self.max_ms = max(self.max_ms, ms)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"ewma_ms": self.ewma_ms, "count": self.count,
+                "min_ms": None if self.count == 0 else self.min_ms,
+                "max_ms": None if self.count == 0 else self.max_ms}
+
+
+@dataclass
+class PhaseBucketStats:
+    """Latency for one (phase, kv_bucket) key: steady-state samples and
+    first-dispatch (trace+compile) samples, segregated — only ``steady``
+    ever feeds admission/preemption estimates."""
+
+    steady: LatencyRecord = field(default_factory=LatencyRecord)
+    compile: LatencyRecord = field(default_factory=LatencyRecord)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"steady": self.steady.as_dict(),
+                "compile": self.compile.as_dict()}
+
+
+def _bucket_key(bucket: Optional[int]) -> int:
+    # None (no KV cache / bucketing off) keys as -1 so the table stays
+    # JSON-sortable; the phase-global aggregate lives under GLOBAL_KEY
+    return -1 if bucket is None else int(bucket)
+
+
+GLOBAL_KEY = "*"
+
+
+class Telemetry:
+    """Metrics + tracing hub for one :class:`ServingEngine` (or bench).
+
+    ``clock`` is the time base (seconds); ``alpha`` the EWMA smoothing
+    factor shared by every record; ``trace_path`` enables JSONL span
+    export (defaults to the ``REPRO_TRACE_PATH`` env var, read once at
+    construction).
+    """
+
+    def __init__(self, clock: Optional[Callable[[], float]] = None,
+                 alpha: float = 0.25,
+                 trace_path: Optional[str] = None):
+        import time
+        self._clock = clock or time.monotonic
+        self.alpha = float(alpha)
+        self.trace_path = (trace_path if trace_path is not None
+                           else os.environ.get("REPRO_TRACE_PATH") or None)
+        # {(phase, bucket_key) -> PhaseBucketStats}; bucket GLOBAL_KEY is
+        # the per-phase aggregate the estimate falls back to
+        self._lat: Dict[Tuple[str, Any], PhaseBucketStats] = {}
+        self._spans: Dict[int, Dict[str, Any]] = {}    # rid -> open span
+        self.finished_spans: List[Dict[str, Any]] = []
+
+    # ------------------------------------------------------- latency table
+    def _entry(self, phase: str, key) -> PhaseBucketStats:
+        if (phase, key) not in self._lat:
+            self._lat[(phase, key)] = PhaseBucketStats()
+        return self._lat[(phase, key)]
+
+    def record_latency(self, phase: str, bucket: Optional[int],
+                       tok_ms: float, *, compiled: bool = False) -> None:
+        """One per-token latency sample for ``phase`` under ``bucket``.
+        ``compiled=True`` marks a first-dispatch (trace+compile) sample:
+        it lands in the segregated compile record and NEVER moves the
+        steady-state estimate."""
+        for key in (_bucket_key(bucket), GLOBAL_KEY):
+            rec = self._entry(phase, key)
+            (rec.compile if compiled else rec.steady).observe(
+                tok_ms, self.alpha)
+
+    def estimate(self, phase: str, bucket: Optional[int]) -> Optional[float]:
+        """Steady-state ms/token for ``phase`` at ``bucket``; falls back
+        to the phase-global steady record when the bucket is unmeasured;
+        None when the phase has no steady samples at all."""
+        for key in (_bucket_key(bucket), GLOBAL_KEY):
+            rec = self._lat.get((phase, key))
+            if rec is not None and rec.steady.count > 0:
+                return rec.steady.ewma_ms
+        return None
+
+    def latency_snapshot(self) -> Dict[str, Dict[str, Any]]:
+        """JSON-able view of the whole table:
+        ``{"decode@256": {"steady": {...}, "compile": {...}}, ...}``
+        (``@*`` = phase-global aggregate, ``@-1`` = unbucketed)."""
+        return {f"{phase}@{key}": rec.as_dict()
+                for (phase, key), rec in sorted(
+                    self._lat.items(), key=lambda kv: (kv[0][0],
+                                                       str(kv[0][1])))}
+
+    # -------------------------------------------------------- span traces
+    def begin_span(self, rid: int, *, prompt_len: int, max_new: int,
+                   deadline_ms: Optional[float] = None,
+                   t: Optional[float] = None) -> None:
+        self._spans[rid] = {
+            "rid": rid, "submit_t": self._clock() if t is None else t,
+            "prompt_len": int(prompt_len), "max_new": int(max_new),
+            "deadline_ms": deadline_ms, "status": "pending", "events": []}
+
+    # repeated same-(kind, bucket) events merge into one counting event:
+    # spans scale with bucket climbs and phase changes, not token counts
+    _COALESCE = {"prefill": "chunks", "decode": "bursts",
+                 "checkpoint": "count"}
+
+    def event(self, rid: int, kind: str, *, bucket: Optional[int] = None,
+              tokens: int = 0, **fields: Any) -> None:
+        """Append one event to ``rid``'s span (no-op for unknown rids, so
+        bench/test callers need no span bookkeeping).  ``prefill`` /
+        ``decode`` / ``checkpoint`` events coalesce with the previous
+        event when the kind AND bucket match."""
+        span = self._spans.get(rid)
+        if span is None:
+            return
+        ev: Dict[str, Any] = {"t": self._clock(), "kind": kind}
+        if bucket is not None:
+            ev["bucket"] = int(bucket)
+        unit = self._COALESCE.get(kind)
+        if unit is not None:
+            prev = span["events"][-1] if span["events"] else None
+            if (prev is not None and prev["kind"] == kind
+                    and prev.get("bucket") == ev.get("bucket")):
+                prev[unit] += 1
+                if kind != "checkpoint":
+                    prev["tokens"] += int(tokens)
+                prev["t_last"] = ev["t"]
+                return
+            ev[unit] = 1
+            if kind != "checkpoint":
+                ev["tokens"] = int(tokens)
+        ev.update(fields)
+        span["events"].append(ev)
+
+    def end_span(self, rid: int, status: str, *,
+                 error: Optional[str] = None, tokens_out: int = 0) -> None:
+        span = self._spans.pop(rid, None)
+        if span is None:
+            return
+        span["status"] = status
+        span["end_t"] = self._clock()
+        span["span_ms"] = (span["end_t"] - span["submit_t"]) * 1e3
+        span["tokens_out"] = int(tokens_out)
+        if error:
+            span["error"] = error
+        span["preemptions"] = sum(1 for e in span["events"]
+                                  if e["kind"] == "preempt")
+        self.finished_spans.append(span)
+        if self.trace_path:
+            with open(self.trace_path, "a") as f:
+                f.write(json.dumps(span) + "\n")
+
+
+def operator_costs(compiled) -> Dict[str, Any]:
+    """Static operator-level attribution for one compiled XLA program:
+    ``{"flops", "bytes", "by_class": {family: {flops, bytes, flop_share,
+    byte_share}}}``.  Totals come from the version-portable
+    :func:`repro.core.hlo_analysis.xla_cost_dict`; the per-family shares
+    (gemm / ssm / norm / memory / arith / collective — the paper's
+    operator taxonomy) from the trip-count-corrected HLO walk, which is
+    what makes scanned-layer models attributable at all (XLA's aggregate
+    counts a ``while`` body once regardless of trip count)."""
+    from repro.core.hlo_analysis import analyze_hlo_text, xla_cost_dict
+    xca = xla_cost_dict(compiled)
+    out: Dict[str, Any] = {"flops": float(xca.get("flops", 0.0)),
+                           "bytes": float(xca.get("bytes accessed", 0.0)),
+                           "by_class": {}}
+    try:
+        summary = analyze_hlo_text(compiled.as_text())
+    except Exception:                                   # pragma: no cover
+        return out
+    tf, tb = summary.flops, summary.bytes
+    for clazz, c in sorted(summary.by_class().items()):
+        out["by_class"][clazz] = {
+            "flops": c["flops"], "bytes": c["bytes"],
+            "flop_share": c["flops"] / tf if tf else 0.0,
+            "byte_share": c["bytes"] / tb if tb else 0.0}
+    return out
+
+
+def read_trace(path: str) -> List[Dict[str, Any]]:
+    """Load a JSONL span trace written via ``REPRO_TRACE_PATH`` (one span
+    object per line; blank lines ignored)."""
+    spans = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                spans.append(json.loads(line))
+    return spans

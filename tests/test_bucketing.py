@@ -218,6 +218,7 @@ def test_kv_cache_extent_window_cap():
     assert kv_cache_extent(ssm_only, 64) is None
 
 
+@pytest.mark.slow
 def test_ring_bucket_slice_bit_exact():
     """Bucket-slicing a not-yet-wrapped ring: chunks at pos + chunk <=
     bucket < window must produce byte-identical logits and caches to the

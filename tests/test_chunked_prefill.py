@@ -81,8 +81,11 @@ def _run_chunked(cfg, params, toks, max_seq, chunk):
     return chunked_prefill(cfg, params, toks, cache, chunk_size=chunk)
 
 
-@pytest.mark.parametrize("arch", ["dense", "mamba2", "mamba1", "hybrid",
-                                  "hybrid_par"])
+@pytest.mark.parametrize("arch", [
+    "dense", "mamba2", "hybrid",                       # tier-1 smoke
+    pytest.param("mamba1", marks=pytest.mark.slow),
+    pytest.param("hybrid_par", marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("chunk", [
     7,                                                 # ragged — tier-1 smoke
     pytest.param(8, marks=pytest.mark.slow),           # even chunking
@@ -233,7 +236,8 @@ def test_chunk_parity_interpret_backend(arch):
 
 
 @pytest.mark.parametrize("arch", [
-    "dense", "hybrid",                                 # tier-1 smoke
+    "dense",                                           # tier-1 smoke
+    pytest.param("hybrid", marks=pytest.mark.slow),
     pytest.param("mamba1", marks=pytest.mark.slow),
     pytest.param("mamba2", marks=pytest.mark.slow),
 ])

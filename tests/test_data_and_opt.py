@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.data.synthetic import DataConfig, SyntheticLM
 from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
@@ -26,6 +27,7 @@ def test_data_needle_planted():
     np.testing.assert_array_equal(toks[:, ins:ins + nl], toks[:, rep:rep + nl])
 
 
+@pytest.mark.slow
 def test_adamw_converges_quadratic():
     opt = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=1)
     params = {"w": jnp.array([5.0, -3.0])}

@@ -290,6 +290,7 @@ def _fault_matrix(arch):
     assert res[1].status == "ok" and res[1].out == ref[1].out
 
 
+@pytest.mark.slow
 def test_fault_matrix_hybrid_ref():
     _fault_matrix("hybrid")
 
@@ -305,6 +306,7 @@ def test_fault_matrix_sweep(arch, backend):
         _fault_matrix(arch)
 
 
+@pytest.mark.slow
 def test_corrupt_preemption_blob_fails_only_victim():
     """slots=1 forces preemption of rid=0; its offload blob is bit-flipped
     so the restore must fail rid=0 with CacheCorruption while rid=1 (the

@@ -25,7 +25,7 @@ def _tol(dtype):
 # the first two shapes are the tier-1 parity smoke; the larger sweep points
 # run under REPRO_RUN_SLOW=1 (scripts/verify.sh)
 @pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
-    (1, 32, 2, 8, 1, 8, 8),
+    pytest.param(1, 32, 2, 8, 1, 8, 8, marks=pytest.mark.slow),
     (2, 64, 4, 16, 2, 16, 16),
     pytest.param(1, 128, 8, 64, 1, 32, 32, marks=pytest.mark.slow),
     pytest.param(2, 96, 4, 32, 4, 64, 32, marks=pytest.mark.slow),
@@ -51,6 +51,7 @@ def test_ssd_kernel(b, s, h, p, g, n, chunk, dtype):
                                rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.slow
 def test_ssd_kernel_matches_sequential_oracle():
     b, s, h, p, g, n = 1, 64, 2, 16, 1, 16
     ks = jax.random.split(KEY, 6)
@@ -144,7 +145,7 @@ def _ring_from_linear(k_lin, wrap, window, ring_len):
 
 @pytest.mark.parametrize("wrap,window,ring_len,sq", [
     ([0, 5, 19], 8, 8, 4),        # cursors before/at/after the wrap
-    ([13, 64], 16, 16, 8),
+    pytest.param([13, 64], 16, 16, 8, marks=pytest.mark.slow),
     # sliced ring (bucket < window): legal only while wrap + sq <= ring_len
     pytest.param([3, 8], 16, 12, 4, marks=pytest.mark.slow),
     pytest.param([21, 40], 32, 32, 16, marks=pytest.mark.slow),
@@ -227,6 +228,7 @@ def test_decode_kernel(b, h, kvh, s, d, split_k):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_decode_kernel_split_boundaries():
     """valid_len landing exactly on block / split edges: the early-exit
     predicate and the split-K combine must not read one row too many or

@@ -72,6 +72,7 @@ def test_mixed_length_chunked_admission_matches_solo():
             err_msg=f"rid={i} diverged from solo decode")
 
 
+@pytest.mark.slow
 def test_no_head_of_line_blocking():
     """A long prompt prefilling chunk-by-chunk must not stall decode: on
     every engine iteration where a prefill chunk ran alongside live slots,
@@ -102,6 +103,7 @@ def test_no_head_of_line_blocking():
                                       _solo(cfg, params, p, 160, 12))
 
 
+@pytest.mark.slow
 def test_preemption_offload_restore_exact_resume():
     """When the queue starves, the engine must offload the slot with the
     most remaining decode work through serving/cache.py and later restore
@@ -127,6 +129,7 @@ def test_preemption_offload_restore_exact_resume():
     assert all(r.blob is None for r in done.values())
 
 
+@pytest.mark.slow
 def test_rolling_window_unified_chunked_admission():
     """Sliding-window archs admit through the SAME chunked pipeline as
     everything else (ring-buffer prefill — no one-shot fallback): prompts
@@ -211,6 +214,7 @@ def test_engine_rejects_non_autoregressive_archs():
         ServingEngine(enc, params, slots=2, max_seq=48)
 
 
+@pytest.mark.slow
 def test_rolling_window_preempts_across_ring_wrap():
     """Starvation preemption on a rolling-window arch, preempted AFTER the
     ring cursor has wrapped (pos > window at offload): the blob carries
@@ -236,6 +240,7 @@ def test_rolling_window_preempts_across_ring_wrap():
                                   _solo(cfg, params, p_short, 96, 6))
 
 
+@pytest.mark.slow
 def test_window_larger_than_max_seq_cache_sizing():
     """Regression for the rolling-cache sizing bug: with window > max_seq,
     ``init_attn_cache`` used to clamp the cache to max_seq rows while
@@ -272,6 +277,7 @@ def test_window_larger_than_max_seq_cache_sizing():
     assert out == gt, f"stale decode past max_seq: {out} vs {gt}"
 
 
+@pytest.mark.slow
 def test_preemption_restore_across_buckets():
     """Bucketed caches + preemption: a request evicted while the engine
     decodes in one KV bucket must resume bit-exactly after the engine has

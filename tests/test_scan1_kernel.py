@@ -24,7 +24,8 @@ def _data(b, s, c, n, dtype):
 
 
 @pytest.mark.parametrize("b,s,c,n,bs,bc", [
-    (1, 32, 16, 8, 8, 16), (2, 64, 32, 16, 16, 16), (1, 48, 64, 16, 16, 32),
+    (1, 32, 16, 8, 8, 16), (2, 64, 32, 16, 16, 16),
+    pytest.param(1, 48, 64, 16, 16, 32, marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_scan1_kernel_sweep(b, s, c, n, bs, bc, dtype):

@@ -53,6 +53,7 @@ def test_late_admitted_slots_match_solo_decode():
             err_msg=f"rid={i} diverged from solo decode")
 
 
+@pytest.mark.slow
 def test_admission_reuses_templates(monkeypatch):
     """Admission must not allocate a fresh full cache per request: the
     chunked-prefill group templates are bounded by the retained batch

@@ -20,6 +20,7 @@ def _tiny_hybrid():
         vocab_pad_multiple=16)
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
     t = Trainer(_tiny_hybrid(), OptConfig(lr=3e-3),
                 TrainerConfig(steps=30, ckpt_every=0, log_every=100),
@@ -30,6 +31,7 @@ def test_training_reduces_loss():
     assert last < first - 0.05, (first, last)
 
 
+@pytest.mark.slow
 def test_restart_resumes_identically(tmp_path):
     """Train 10 steps with a checkpoint at 5; a fresh trainer restored at 5
     must reproduce steps 6-10 exactly (deterministic data + optimizer)."""

@@ -1,0 +1,247 @@
+"""Telemetry layer: the per-(phase, KV-bucket) latency model, span
+traces, and the compile-sample regressions it exists to fix.
+
+Regression coverage (ISSUE 7):
+
+* a decode burst entering a FRESH KV bucket pays XLA trace+compile; its
+  latency sample must land in the segregated compile record and never
+  move the steady-state EWMA feeding deadline admission (the engine used
+  to compute ``fresh_compile`` and then not gate the sample with it);
+* ragged final prefill chunks used to divide by the padded chunk size,
+  deflating the per-token estimate used for admission;
+* engine timing mixed ``time.perf_counter()`` with the injectable
+  ``clock`` — all timestamps must now come from one clock, so
+  fake-clock tests see consistent EWMAs and span traces.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import AttnConfig, ModelConfig, SSMConfig
+from repro.models.lm import init_lm_params
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.telemetry import (Telemetry, operator_costs, read_trace)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg():
+    return ModelConfig(name="hyb", family="hybrid", n_layers=4, d_model=64,
+                       d_ff=0, vocab_size=97,
+                       ssm=SSMConfig(d_state=16, headdim=16, chunk=8),
+                       layer_pattern=("mamba2", "mamba2+shared"),
+                       shared_attn=AttnConfig(n_heads=4, n_kv_heads=4,
+                                              head_dim=16),
+                       shared_attn_d_ff=128, vocab_pad_multiple=16)
+
+
+class FakeClock:
+    """Injectable engine clock: advances ``tick_ms`` on every read."""
+
+    def __init__(self, tick_ms=0.0):
+        self.t = 0.0
+        self.tick = tick_ms / 1e3
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+def _prompt(cfg, n, seed=3):
+    rng = np.random.default_rng(seed)
+    return rng.integers(2, cfg.vocab_size, int(n)).astype(np.int32)
+
+
+# ------------------------------------------------------------ unit layer
+
+def test_compile_samples_segregated_from_steady():
+    tel = Telemetry(clock=lambda: 0.0, trace_path="")
+    tel.record_latency("decode", 128, 500.0, compiled=True)   # compile spike
+    tel.record_latency("decode", 128, 1.0)
+    tel.record_latency("decode", 128, 3.0)
+    # steady estimate sees ONLY the steady samples
+    assert tel.estimate("decode", 128) == pytest.approx(
+        0.25 * 3.0 + 0.75 * 1.0)
+    snap = tel.latency_snapshot()["decode@128"]
+    assert snap["compile"]["count"] == 1
+    assert snap["compile"]["max_ms"] == 500.0
+    assert snap["steady"]["count"] == 2
+    assert snap["steady"]["min_ms"] == 1.0 and snap["steady"]["max_ms"] == 3.0
+
+
+def test_estimate_falls_back_bucket_to_global_to_none():
+    tel = Telemetry(clock=lambda: 0.0, trace_path="")
+    assert tel.estimate("decode", 128) is None
+    tel.record_latency("decode", 128, 2.0)
+    # unmeasured bucket falls back to the phase-global steady record
+    assert tel.estimate("decode", 512) == pytest.approx(2.0)
+    # a phase with only compile samples still has no steady estimate
+    tel.record_latency("prefill", 128, 99.0, compiled=True)
+    assert tel.estimate("prefill", 128) is None
+
+
+def test_operator_costs_reports_kernel_family_shares():
+    fn = jax.jit(lambda a, b: jnp.tanh(jnp.dot(a, b)))
+    x = jnp.ones((32, 32), jnp.float32)
+    costs = operator_costs(fn.lower(x, x).compile())
+    assert costs["flops"] > 0
+    assert "gemm" in costs["by_class"]
+    assert costs["by_class"]["gemm"]["flop_share"] > 0.5
+    total = sum(c["flop_share"] for c in costs["by_class"].values())
+    assert total == pytest.approx(1.0, abs=1e-6)
+
+
+# ---------------------------------------------------------- engine layer
+
+def test_fresh_bucket_burst_tagged_compile_not_steady():
+    """Decode climbs the bucket ladder (128 -> 256): exactly one compile
+    sample per bucket key, everything else steady — the ladder climb no
+    longer moves the steady-state EWMA that admission relies on."""
+    cfg = _cfg()
+    params = init_lm_params(cfg, KEY)
+    eng = ServingEngine(cfg, params, slots=1, max_seq=320, decode_block=8,
+                        chunk_size=16, clock=FakeClock(tick_ms=1.0))
+    eng.submit(Request(rid=0, prompt=_prompt(cfg, 16), max_new=160))
+    (req,) = eng.run(max_iters=500)
+    assert req.status == "ok" and len(req.out) == 160
+    assert {128, 256} <= eng.buckets_used
+    snap = eng.telemetry.latency_snapshot()
+    total_steady = 0
+    for bucket in (128, 256):
+        rec = snap[f"decode@{bucket}"]
+        assert rec["compile"]["count"] == 1, (bucket, rec)
+        assert rec["steady"]["count"] >= 1, (bucket, rec)
+        total_steady += rec["steady"]["count"]
+    # the phase-global aggregate is exactly the per-bucket records summed
+    assert snap["decode@*"]["compile"]["count"] == 2
+    assert snap["decode@*"]["steady"]["count"] == total_steady
+    assert eng.stats["ewma_tpot_ms"] > 0.0
+
+
+def test_admission_estimate_ignores_compile_spikes():
+    """A 500ms compile sample next to 1ms steady samples must not reject
+    a feasible request — the spurious-timeout regression."""
+    cfg = _cfg()
+    params = init_lm_params(cfg, KEY)
+    eng = ServingEngine(cfg, params, slots=1, max_seq=320, decode_block=8,
+                        clock=FakeClock())
+    eng.telemetry.record_latency("decode", 128, 500.0, compiled=True)
+    eng.telemetry.record_latency("decode", 128, 1.0)
+    eng.telemetry.record_latency("prefill", 128, 0.5)
+    req = Request(rid=0, prompt=_prompt(cfg, 8), max_new=16,
+                  deadline_ms=100.0)
+    est = eng._admission_estimate_ms(req)
+    # 8 * 0.5 + 16 * 1.0 = 20ms, comfortably inside the 100ms budget;
+    # had the compile spike fed steady state this would be > 2000ms
+    assert est == pytest.approx(8 * 0.5 + 16 * 1.0)
+    eng.submit(req)
+    done = {r.rid: r for r in eng.run(max_iters=200)}
+    assert done[0].status == "ok"
+
+
+def test_ragged_final_chunk_divides_by_valid_tokens():
+    """Prompt of 12 tokens through chunk_size=8: the final chunk carries
+    4 valid tokens.  With a 1ms-per-clock-read fake clock every chunk
+    measures 1ms, so the steady per-token estimate must be 1/4 ms (valid
+    tokens), not 1/8 ms (padded chunk size)."""
+    cfg = _cfg()
+    params = init_lm_params(cfg, KEY)
+    eng = ServingEngine(cfg, params, slots=1, max_seq=64, decode_block=4,
+                        chunk_size=8, clock=FakeClock(tick_ms=1.0))
+    eng.submit(Request(rid=0, prompt=_prompt(cfg, 12), max_new=4))
+    (req,) = eng.run(max_iters=100)
+    assert req.status == "ok"
+    # chunk 0 (8 valid) is the fresh-compile sample; chunk 1 (4 valid) is
+    # the only steady sample: 1ms / 4 tokens
+    assert eng.stats["ewma_prefill_tok_ms"] == pytest.approx(0.25)
+    snap = eng.telemetry.latency_snapshot()
+    # exactly one concrete prefill bucket key (max_seq=64 caps the ladder)
+    (key,) = [k for k in snap
+              if k.startswith("prefill@") and not k.endswith("@*")]
+    rec = snap[key]
+    assert rec["compile"]["count"] == 1
+    assert rec["compile"]["min_ms"] == pytest.approx(1.0 / 8)
+    assert rec["steady"]["count"] == 1
+    assert rec["steady"]["ewma_ms"] == pytest.approx(0.25)
+
+
+def test_engine_timing_single_clock_source():
+    """Every telemetry timestamp must come from the injected clock: with
+    a fake clock starting at 0, a perf_counter() leak would show up as a
+    timestamp ~ hours-to-years ahead of the fake time base."""
+    cfg = _cfg()
+    params = init_lm_params(cfg, KEY)
+    clock = FakeClock(tick_ms=1.0)
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64, decode_block=4,
+                        chunk_size=8, clock=clock)
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=_prompt(cfg, 9 + i), max_new=6))
+    eng.run(max_iters=200)
+    assert len(eng.telemetry.finished_spans) == 2
+    for span in eng.telemetry.finished_spans:
+        assert 0.0 < span["submit_t"] <= span["end_t"] <= clock.t
+        for ev in span["events"]:
+            assert span["submit_t"] <= ev["t"] <= clock.t
+
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    cfg = _cfg()
+    params = init_lm_params(cfg, KEY)
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64, decode_block=4,
+                        chunk_size=8, trace_path=path)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=_prompt(cfg, 7 + 3 * i), max_new=5))
+    eng.run(max_iters=300)
+    spans = read_trace(path)
+    assert sorted(s["rid"] for s in spans) == [0, 1, 2]
+    for s in spans:
+        assert s["status"] == "ok"
+        assert s["tokens_out"] == 5
+        kinds = [e["kind"] for e in s["events"]]
+        assert "prefill" in kinds and "decode" in kinds
+        prefill = [e for e in s["events"] if e["kind"] == "prefill"]
+        assert sum(e["tokens"] for e in prefill) == s["prompt_len"]
+        decode = [e for e in s["events"] if e["kind"] == "decode"]
+        # the first output token is emitted by the final prefill chunk,
+        # so decode bursts account for max_new - 1 of the 5 tokens
+        assert sum(e["tokens"] for e in decode) == 4
+        for e in prefill + decode:
+            assert e["bucket"] > 0
+        # bursts coalesce: the span scales with bucket climbs, not tokens
+        assert len(decode) <= 4
+    # each line is standalone JSON (the JSONL contract)
+    with open(path) as f:
+        for line in f:
+            json.loads(line)
+
+
+def test_span_records_preemption_and_terminal_error():
+    cfg = _cfg()
+    params = init_lm_params(cfg, KEY)
+    eng = ServingEngine(cfg, params, slots=1, max_seq=64, decode_block=2,
+                        preempt_after=1, clock=FakeClock())
+    p = _prompt(cfg, 6)
+    eng.submit(Request(rid=0, prompt=p, max_new=24))
+    eng.submit(Request(rid=1, prompt=_prompt(cfg, 6, seed=4), max_new=4))
+    eng.run(max_iters=300)
+    spans = {s["rid"]: s for s in eng.telemetry.finished_spans}
+    assert spans[0]["preemptions"] >= 1
+    assert any(e["kind"] == "preempt" for e in spans[0]["events"])
+    assert any(e["kind"] == "restore" for e in spans[0]["events"])
+    # a failed request carries its structured error on the span
+    eng2 = ServingEngine(cfg, params, slots=1, max_seq=64, decode_block=4,
+                         clock=FakeClock())
+    bad = Request(rid=7, prompt=p, max_new=4, deadline_ms=5.0)
+    eng2.submit(bad)
+    eng2._clock.advance_ms(50)
+    eng2.run(max_iters=50)
+    (span,) = eng2.telemetry.finished_spans
+    assert span["status"] == "timed_out"
+    assert "deadline" in span["error"]

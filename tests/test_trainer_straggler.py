@@ -2,12 +2,14 @@
 import time
 
 import numpy as np
+import pytest
 
 from repro.core.config import ModelConfig, SSMConfig
 from repro.train.optimizer import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
 
+@pytest.mark.slow
 def test_straggler_detected():
     cfg = ModelConfig(name="t", family="ssm", n_layers=2, d_model=32, d_ff=0,
                       vocab_size=64,
