@@ -42,7 +42,7 @@ from repro.models.lm import (decode_tokens, init_lm_cache, init_lm_params,
                              lm_prefill)
 from repro.serving.bucketing import select_kv_bucket
 from repro.serving.prefill import _jitted_chunk_step, chunked_prefill
-from repro.serving.telemetry import operator_costs
+from repro.serving.telemetry import TRACE_SCHEMA_VERSION, operator_costs
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(ROOT, "BENCH_attn.json")
@@ -203,6 +203,7 @@ def main() -> None:
     per_bucket = {name: {str(r["bucket"]): r["bucketed_ms"] for r in rows}
                   for name, rows in scaling.items()}
     record = {"bench": "attn", "smoke": bool(args.smoke),
+              "schema_version": TRACE_SCHEMA_VERSION,
               "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
               "max_seq": max_seq, "chunk": chunk, "scaling": scaling,
               "per_bucket_ms": per_bucket, "operator_shares": op_shares,

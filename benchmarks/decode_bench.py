@@ -38,9 +38,15 @@ from repro.core.config import AttnConfig, ModelConfig, SSMConfig
 from repro.models.lm import init_lm_cache, init_lm_params
 from repro.serving.engine import (make_decode_step, make_decode_tokens,
                                   make_prefill_step)
+from repro.serving.profiler import PROFILE_SCHEMA_VERSION, Profiler
+from repro.serving.telemetry import TRACE_SCHEMA_VERSION
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(ROOT, "BENCH_decode.json")
+
+#: contexts the measured-share sweep decodes at (the longest is where the
+#: ssm-family plurality gate applies)
+PROFILE_CONTEXTS = (64, 448, 960)
 
 
 def bench_configs(d_model: int = 64):
@@ -62,6 +68,108 @@ def bench_configs(d_model: int = 64):
                                            head_dim=d_model // 4),
                     shared_attn_d_ff=2 * d_model, vocab_pad_multiple=16),
     ]
+
+
+def profile_configs(d_model: int = 96):
+    """Configs for the *measured* kernel-family share sweep.  Sized so the
+    decode burst is honestly SSM-bound (batch 8, d_state 256, headdim 32):
+    at toy batch-1 scale the recurrence is weight-read-bound and gemm
+    dominates, which says nothing about the paper's regime.  The hybrid
+    interleaves one shared-attention layer per six, so the ssm family
+    keeps the plurality at the longest smoke context while the attention
+    share still grows with context (the paper's crossover trend)."""
+    ssm = SSMConfig(d_state=256, headdim=32, chunk=32)
+    return [
+        ModelConfig(name="ssm-prof", family="ssm", n_layers=4,
+                    d_model=d_model, d_ff=0, vocab_size=256, ssm=ssm,
+                    layer_pattern=("mamba2",), vocab_pad_multiple=16),
+        ModelConfig(name="hybrid-prof", family="hybrid", n_layers=6,
+                    d_model=d_model, d_ff=0, vocab_size=256, ssm=ssm,
+                    layer_pattern=("mamba2", "mamba2", "mamba2", "mamba2",
+                                   "mamba2", "mamba2+shared"),
+                    shared_attn=AttnConfig(n_heads=3, n_kv_heads=1,
+                                           head_dim=32),
+                    shared_attn_d_ff=2 * d_model, vocab_pad_multiple=16),
+    ]
+
+
+def bench_measured_shares(contexts=PROFILE_CONTEXTS, burst: int = 16,
+                          reps: int = 3) -> list:
+    """Measured per-kernel-family runtime shares vs context length — the
+    profiler-trace counterpart of the static ``operator_shares`` record.
+
+    For one SSM and one hybrid config, prefill ``batch=8`` prompts to
+    each context length, then wrap ``reps`` steady decode bursts in a
+    :class:`Profiler` trace window (compile happens OUTSIDE the window)
+    and attribute the device events to families.  On hosts without trace
+    support the window degrades to static-weight apportioning and the
+    row is flagged ``degraded`` — fig7/fig8 still get a curve, but the
+    smoke gate reports it."""
+    records = []
+    for cfg in profile_configs():
+        prof = Profiler(mode="trace")
+        rows = []
+        for ctx in contexts:
+            params, cache, first = _prefilled(cfg, 8, ctx, ctx + burst + 8)
+            decode_n = jax.jit(make_decode_tokens(cfg),
+                               static_argnames=("n",))
+            toks, _ = decode_n(params, cache, first, n=burst)  # compile
+            jax.block_until_ready(toks)
+            key = f"{cfg.name}@{ctx}"
+            prof.register(
+                key, decode_n.lower(params, cache, first, n=burst).compile())
+            with prof.window(key) as ft:
+                for _ in range(reps):
+                    toks, _ = decode_n(params, cache, first, n=burst)
+                    jax.block_until_ready(toks)
+            shares = ft.shares()
+            top = max(shares, key=shares.get) if shares else None
+            rows.append({"context": ctx, "shares": shares,
+                         "plurality": top, "wall_ms": ft.wall_ms,
+                         "events": ft.events, "degraded": ft.degraded})
+            print(f"measured {cfg.name:12s} ctx={ctx:5d} "
+                  f"events={ft.events:6d} top={top} "
+                  + " ".join(f"{k}={v:.3f}" for k, v in sorted(
+                      shares.items(), key=lambda kv: -kv[1])[:4]))
+        records.append({"version": PROFILE_SCHEMA_VERSION, "arch": cfg.name,
+                        "family": cfg.family, "mode": prof.mode, "batch": 8,
+                        "burst": burst, "reps": reps, "rows": rows})
+    return records
+
+
+def _gate_measured_shares(records: list) -> None:
+    """Smoke gates on the measured sweep: both archs present, each row's
+    family shares sum to 1 (within float eps), and the ssm family holds
+    the plurality at the LONGEST context for the SSM and hybrid configs —
+    the paper's measured headline (custom SSM kernels dominate edge
+    inference latency)."""
+    fams = {r["family"] for r in records}
+    if not {"ssm", "hybrid"} <= fams:
+        raise SystemExit(f"measured sweep missing an arch: got {fams}, "
+                         "need ssm + hybrid")
+    for rec in records:
+        for row in rec["rows"]:
+            total = sum(row["shares"].values())
+            if row["shares"] and not 0.999 <= total <= 1.001:
+                raise SystemExit(
+                    f"{rec['arch']} ctx={row['context']}: measured family "
+                    f"shares sum to {total:.4f}")
+        last = rec["rows"][-1]
+        if last["degraded"]:
+            print(f"measured {rec['arch']}: host produced no device trace "
+                  "(degraded to static apportioning); plurality gate "
+                  "skipped")
+            continue
+        if last["plurality"] != "ssm":
+            raise SystemExit(
+                f"{rec['arch']} ctx={last['context']}: expected the ssm "
+                f"family plurality in measured shares, got "
+                f"{last['plurality']} ({last['shares']})")
+    print("measured-share smoke OK: ssm-family plurality at ctx="
+          f"{records[0]['rows'][-1]['context']} for "
+          + ", ".join(f"{r['arch']}="
+                      f"{r['rows'][-1]['shares'].get('ssm', 0):.3f}"
+                      for r in records))
 
 
 def _prefilled(cfg, batch: int, plen: int, max_seq: int):
@@ -270,8 +378,11 @@ def bench_serving_telemetry(gen_len: int) -> dict:
     cfg = bench_configs()[2]                    # hybrid: both layer kinds
     params = init_lm_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
+    # coarse profiler: exercises the always-on per-dispatch hook so the
+    # smoke can gate its bookkeeping overhead (< 3% of decode wall)
     eng = ServingEngine(cfg, params, slots=2, max_seq=192 + gen_len,
-                        decode_block=8, chunk_size=32)
+                        decode_block=8, chunk_size=32,
+                        profiler=Profiler(mode="coarse"))
     for i, n in enumerate((40, 24)):
         prompt = rng.integers(2, cfg.vocab_size, n).astype(np.int32)
         eng.submit(Request(rid=i, prompt=prompt, max_new=gen_len + 128))
@@ -286,34 +397,71 @@ def bench_serving_telemetry(gen_len: int) -> dict:
         kv_bucket=bucket, rope_len=eng.rope_len,
         with_sentinel=eng.sentinel)
     shares = operator_costs(lowered.compile())
-    per_bucket = eng.telemetry.latency_snapshot()
+    snap = eng.telemetry.latency_snapshot()
 
-    decode_keys = [k for k in per_bucket if k.startswith("decode@")
+    decode_keys = [k for k in snap["table"] if k.startswith("decode@")
                    and not k.endswith("@*")]
-    print(f"telemetry: {len(decode_keys)} decode bucket(s) "
-          f"{sorted(decode_keys)}; top-rung program "
-          f"{shares['flops']:.3g} flops, shares "
+    print(f"telemetry: arch={snap['arch']} v{snap['version']}, "
+          f"{len(decode_keys)} decode bucket(s) {sorted(decode_keys)}; "
+          f"top-rung program {shares['flops']:.3g} flops, shares "
           + ", ".join(f"{k}={v['flop_share']:.2f}"
                       for k, v in shares["by_class"].items()))
-    return {"per_bucket": per_bucket, "operator_shares": shares}
+    return {"per_bucket": snap, "operator_shares": shares,
+            "profile": eng.profile_snapshot(),
+            "stats": {"iters": eng.stats["iters"],
+                      "ewma_tpot_ms": eng.stats["ewma_tpot_ms"],
+                      "ewma_prefill_tok_ms":
+                          eng.stats["ewma_prefill_tok_ms"]}}
 
 
 def _gate_telemetry(telem: dict) -> None:
-    """Structural smoke gates on the telemetry record: compile samples
-    segregated per rung (exactly one first-dispatch each), steady samples
-    present, and the operator shares well-formed."""
-    per_bucket = telem["per_bucket"]
-    decode_keys = [k for k in per_bucket if k.startswith("decode@")
+    """Structural smoke gates on the telemetry record: snapshot schema
+    (version + explicit arch), compile samples segregated per rung
+    (exactly one first-dispatch each), steady samples present AND
+    consistent — the per-rung steady counts must add up to the global
+    aggregate and the scalar steady EWMA must be warm whenever bursts
+    outnumber rungs, so a regression of the ``fresh_compile`` gating
+    (every sample tagged compile, or none) cannot pass silently — plus
+    well-formed operator shares and a bounded coarse-profiler overhead."""
+    snap = telem["per_bucket"]
+    if snap.get("version") != TRACE_SCHEMA_VERSION or not snap.get("arch"):
+        raise SystemExit(
+            f"telemetry snapshot missing version/arch: "
+            f"{ {k: snap.get(k) for k in ('version', 'arch')} }")
+    table = snap["table"]
+    decode_keys = [k for k in table if k.startswith("decode@")
                    and not k.endswith("@*")]
     if len(decode_keys) < 2:
         raise SystemExit(
             f"expected >= 2 decode bucket rungs in telemetry, got "
             f"{sorted(decode_keys)}")
+    steady_sum = compile_sum = 0
     for k in decode_keys:
-        rec = per_bucket[k]
+        rec = table[k]
         if rec["compile"]["count"] != 1 or rec["steady"]["count"] < 1:
             raise SystemExit(
                 f"{k}: compile/steady segregation broken: {rec}")
+        steady_sum += rec["steady"]["count"]
+        compile_sum += rec["compile"]["count"]
+    agg = table["decode@*"]
+    if (agg["steady"]["count"] != steady_sum
+            or agg["compile"]["count"] != compile_sum):
+        raise SystemExit(
+            "decode@* aggregate does not reconcile with the rungs: "
+            f"steady {agg['steady']['count']} != {steady_sum} or compile "
+            f"{agg['compile']['count']} != {compile_sum}")
+    bursts = steady_sum + compile_sum
+    if bursts > len(decode_keys):
+        # more bursts than rungs => steady samples MUST exist and feed
+        # the scalar EWMA the admission fallback path reads
+        if agg["steady"]["count"] == 0:
+            raise SystemExit(
+                f"{bursts} decode bursts over {len(decode_keys)} rungs "
+                "but zero steady samples: fresh_compile gating regressed")
+        if telem["stats"]["ewma_tpot_ms"] <= 0.0:
+            raise SystemExit(
+                "steady decode samples exist but ewma_tpot_ms is cold: "
+                f"{telem['stats']}")
     shares = telem["operator_shares"]["by_class"]
     if "gemm" not in shares or "ssm" not in shares:
         raise SystemExit(
@@ -322,9 +470,17 @@ def _gate_telemetry(telem: dict) -> None:
     total = sum(c["flop_share"] for c in shares.values())
     if not 0.99 <= total <= 1.01:
         raise SystemExit(f"operator flop shares sum to {total:.4f}")
-    print(f"telemetry smoke OK: rungs {sorted(decode_keys)} each with 1 "
-          "compile + >=1 steady sample; operator shares sum to "
-          f"{total:.3f}")
+    prof = telem["profile"]
+    decode_wall = prof["coarse"].get("decode", {}).get("wall_ms", 0.0)
+    if decode_wall > 0 and prof["overhead_ms"] >= 0.03 * decode_wall:
+        raise SystemExit(
+            f"coarse profiler overhead {prof['overhead_ms']:.2f}ms is >= "
+            f"3% of the {decode_wall:.1f}ms decode wall")
+    print(f"telemetry smoke OK: arch={snap['arch']}, rungs "
+          f"{sorted(decode_keys)} each with 1 compile + >=1 steady sample "
+          f"(aggregate reconciles, {bursts} bursts); operator shares sum "
+          f"to {total:.3f}; coarse profiler overhead "
+          f"{prof['overhead_ms']:.3f}ms / {decode_wall:.1f}ms decode wall")
 
 
 def main() -> None:
@@ -380,12 +536,16 @@ def main() -> None:
               f"speedup {row['speedup']:.2f}x")
 
     telem = bench_serving_telemetry(gen_len)
+    measured = bench_measured_shares()
     _append_run({"bench": "decode", "smoke": bool(args.smoke),
+                 "schema_version": TRACE_SCHEMA_VERSION,
                  "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
-                 "results": results, "serving_telemetry": telem})
+                 "results": results, "serving_telemetry": telem,
+                 "measured_shares": measured})
 
     if args.smoke:
         _gate_telemetry(telem)
+        _gate_measured_shares(measured)
         speedups = [r["speedup"] for r in results.values()]
         gmean = float(np.exp(np.mean(np.log(speedups))))
         worst = min(speedups)

@@ -3,13 +3,59 @@
 
 Claims: SSM-specific ops dominate; Mamba-2's SSM share > Mamba-1's
 (d_state 16 -> 128); for Mamba-1 memory ops > arith among non-GEMM, for
-Mamba-2 arith > memory."""
+Mamba-2 arith > memory.
+
+The curves above are STATIC (roofline cost model).  When
+``BENCH_decode.json`` carries a ``measured_shares`` record (written by
+``decode_bench.py`` via the profiler-trace sweep), the *measured*
+runtime-share curve for the SSM profiling config is emitted next to the
+static one — the paper's numbers are measured, so the figure should show
+both."""
 from __future__ import annotations
+
+import json
+import os
 
 from repro.core.config import RTX_4090
 from benchmarks.common import Emitter, class_times, cost_for
 
 SEQS = (256, 1024, 4096, 16384, 65536)
+
+_BENCH_DECODE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_decode.json")
+
+
+def measured_share_records(family: str, path: str = _BENCH_DECODE):
+    """Latest ``measured_shares`` records for one arch family from
+    ``BENCH_decode.json``; [] when the file / record is absent (the
+    figure then plots only the static curve)."""
+    try:
+        with open(path) as f:
+            runs = json.load(f).get("runs", [])
+    except (OSError, ValueError):
+        return []
+    for run in reversed(runs):
+        recs = [r for r in run.get("measured_shares", [])
+                if r.get("family") == family and r.get("rows")]
+        if recs:
+            return recs
+    return []
+
+
+def emit_measured(em: Emitter, fig: str, family: str) -> None:
+    for rec in measured_share_records(family):
+        for row in rec["rows"]:
+            sh = row["shares"]
+            top = row.get("plurality") or "-"
+            em.emit(
+                f"{fig}.measured.{rec['arch']}.s{row['context']}",
+                row.get("wall_ms", 0.0) * 1e3,
+                "ssm={:.0f}%_gemm={:.0f}%_arith={:.0f}%_mem={:.0f}%_"
+                "top={}{}".format(
+                    100 * sh.get("ssm", 0), 100 * sh.get("gemm", 0),
+                    100 * sh.get("arith", 0), 100 * sh.get("memory", 0),
+                    top, "_degraded" if row.get("degraded") else ""))
 
 
 def _shares(model: str, seq: int):
@@ -36,3 +82,6 @@ def run(em: Emitter) -> None:
     em.emit("fig7.claim.mamba2_arith_gt_memory",
             100 * s2.get("arith", 0),
             f"arith={100 * s2.get('arith', 0):.1f}%_mem={100 * s2.get('memory', 0):.1f}%")
+    # measured (profiler-trace) curve next to the static one, when a
+    # decode_bench measured-share sweep has been recorded
+    emit_measured(em, "fig7", "ssm")

@@ -2,11 +2,17 @@
 Hymba's head-parallel design is out of scope, noted in DESIGN.md).
 
 Claim: hybrids are NOT dominated by SSM ops; GEMM share stays roughly
-constant while SSM share diminishes with sequence length."""
+constant while SSM share diminishes with sequence length.
+
+Static (roofline) curves; when ``BENCH_decode.json`` carries a
+``measured_shares`` record, the *measured* hybrid runtime-share curve is
+emitted alongside (same trend at profiling scale: ssm share shrinking as
+the attention arith share grows with context)."""
 from __future__ import annotations
 
 from repro.core.config import RTX_4090
 from benchmarks.common import Emitter, class_times, cost_for
+from benchmarks.fig7_op_breakdown import emit_measured
 
 SEQS = (1024, 4096, 16384, 49152)
 
@@ -30,3 +36,4 @@ def run(em: Emitter) -> None:
             100 * shares[SEQS[-1]].get("ssm", 0),
             f"{100 * shares[SEQS[0]].get('ssm', 0):.0f}%->"
             f"{100 * shares[SEQS[-1]].get('ssm', 0):.0f}%")
+    emit_measured(em, "fig8", "hybrid")

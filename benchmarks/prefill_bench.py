@@ -50,6 +50,7 @@ from repro.models.lm import init_lm_cache, init_lm_params
 from repro.serving.bucketing import rope_len_for
 from repro.serving.engine import Request, ServingEngine, make_prefill_step
 from repro.serving.prefill import _jitted_chunk_step, chunked_prefill
+from repro.serving.telemetry import TRACE_SCHEMA_VERSION
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(ROOT, "BENCH_prefill.json")
@@ -179,7 +180,8 @@ def bench_interleave(long_len: int, chunk: int) -> dict:
         "fairness": fairness,
         # per-(phase, KV-bucket) latency table — the long prompt walks the
         # whole ladder, so this record carries one entry per rung with
-        # compile samples segregated from steady state
+        # compile samples segregated from steady state; the snapshot names
+        # its schema version and arch ({"version", "arch", "table"})
         "per_bucket": eng.telemetry.latency_snapshot(),
     }
 
@@ -219,6 +221,7 @@ def main() -> None:
           f"{inter['wall_s']:.1f}s")
 
     record = {"bench": "prefill", "smoke": bool(args.smoke),
+              "schema_version": TRACE_SCHEMA_VERSION,
               "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
               "chunk": chunk, "results": results, "interleave": inter}
     runs = []

@@ -9,6 +9,12 @@ Scans every ``docs/*.md`` (plus ``benchmarks/README.md``) for
     longer read anywhere under ``src/`` or ``scripts/``;
   * ``BENCH_*.json`` trajectory records, and fails if the file is gone.
 
+It also validates the REVERSE direction for environment variables: every
+``REPRO_*`` variable actually read under ``src/`` or ``scripts/`` must
+have a row in ``docs/CONFIGURATION.md`` — adding a knob without
+documenting it fails verify.sh (this is how REPRO_PROFILE,
+REPRO_METRICS_PATH and REPRO_TELEMETRY_WARMSTART stay documented).
+
 This keeps the docs subsystem from rotting silently: renaming a module,
 deleting an env var, or retiring a trajectory breaks verify.sh until the
 docs are updated.  References may carry a ``:symbol`` suffix
@@ -74,6 +80,15 @@ def main() -> int:
         for rec in set(BENCH_RE.findall(text)):
             if not (ROOT / rec).exists():
                 stale.append(f"{rel}: trajectory record `{rec}` is missing")
+    # reverse direction: every env var the runtime reads must have a row
+    # in docs/CONFIGURATION.md
+    config_doc = ROOT / "docs" / "CONFIGURATION.md"
+    documented = (set(ENV_RE.findall(config_doc.read_text()))
+                  if config_doc.exists() else set())
+    for var in sorted(tree_envs - documented):
+        stale.append(
+            f"docs/CONFIGURATION.md: env var `{var}` is read under src/ "
+            "or scripts/ but has no documentation row")
     if stale:
         print("check_docs FAILED — stale references:", file=sys.stderr)
         for s in stale:

@@ -12,9 +12,16 @@
 # chunked-prefill parity), the fault smoke (divergence sentinels +
 # periodic checkpointing < 5% overhead on the healthy path, NaN recovery
 # replays bit-identically), and the docs freshness check (paths / REPRO_*
-# vars named in docs/*.md must exist — see docs/CONFIGURATION.md for the
-# thresholds), and fails if any failed (the smokes still run when
-# pre-existing tests fail, so the perf trajectories are always recorded).
+# vars named in docs/*.md must exist AND every REPRO_* var the runtime
+# reads is documented — see docs/CONFIGURATION.md for the thresholds),
+# and fails if any failed (the smokes still run when pre-existing tests
+# fail, so the perf trajectories are always recorded).
+#
+# The decode smoke carries the PROFILER gates: measured kernel-family
+# shares (jax.profiler trace sweep) must sum to 1, the ssm family must
+# hold the plurality at the longest profiled context for the SSM and
+# hybrid profiling configs, and the coarse-mode profiler's bookkeeping
+# overhead on the serving decode path must stay < 3% of decode wall.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 

@@ -68,8 +68,11 @@ ZERO_COST_OPS = {
     "collective-permute-done", "async-done", "custom-call",
 }
 
-# named_scope → paper operator class (priority order)
-SSM_SCOPES = ("ssd_core", "ssm_core", "conv1d", "ssm_gate")
+# named_scope → paper operator class (priority order).  "decode_fused" is
+# the serving decode-step recurrence (fused conv shift + SSM state update,
+# src/repro/kernels/decode_fused/) — it IS the custom SSM kernel on the
+# decode path, so its ops belong to the ssm family, not arith/memory.
+SSM_SCOPES = ("ssd_core", "ssm_core", "conv1d", "ssm_gate", "decode_fused")
 NORM_SCOPES = ("norm",)
 
 
@@ -245,7 +248,8 @@ def _scope_of(op_name: str) -> str:
     """Last interesting named_scope component of the metadata path."""
     parts = [p for p in op_name.split("/") if p]
     known = SSM_SCOPES + NORM_SCOPES + (
-        "attn_core", "qkv_proj", "o_proj", "rope", "mlp", "moe_route",
+        "attn_core", "attn_decode", "qkv_proj", "o_proj", "rope", "mlp",
+        "moe_route",
         "moe_dispatch", "moe_expert", "moe_combine", "moe_shared_expert",
         "embed", "lm_head", "ssm_in_proj", "ssm_out_proj", "optimizer",
         "loss", "grad_compress")

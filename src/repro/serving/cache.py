@@ -145,7 +145,19 @@ def _finalize_blob(out: Dict[str, np.ndarray]) -> Dict[str, Any]:
     return blob
 
 
-def offload_slot(cache: Any, b: int) -> Dict[str, Any]:
+def _blob_nbytes(blob: Dict[str, Any]) -> int:
+    return sum(v.nbytes for v in blob.values() if hasattr(v, "nbytes"))
+
+
+def _count_bytes(metrics, name: str, nbytes: int) -> None:
+    """Optional metrics hook (a :class:`repro.serving.metrics
+    .MetricsRegistry`): get-or-create is one dict lookup, so threading it
+    through the offload/restore hot path costs nothing when unset."""
+    if metrics is not None:
+        metrics.counter(name, "host<->device cache traffic").inc(nbytes)
+
+
+def offload_slot(cache: Any, b: int, metrics=None) -> Dict[str, Any]:
     """Host-offload one slot (preempted request / periodic checkpoint) as
     numpy arrays, plus a ``__meta__`` integrity record (per-key crc32 +
     schema fingerprint) that :func:`restore_slot` validates."""
@@ -155,10 +167,12 @@ def offload_slot(cache: Any, b: int) -> Dict[str, Any]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
         out[key] = np.asarray(leaf)
-    return _finalize_blob(out)
+    blob = _finalize_blob(out)
+    _count_bytes(metrics, "repro_offload_bytes_total", _blob_nbytes(blob))
+    return blob
 
 
-def offload_slots(cache: Any, bs) -> Dict[int, Dict[str, Any]]:
+def offload_slots(cache: Any, bs, metrics=None) -> Dict[int, Dict[str, Any]]:
     """Host-offload SEVERAL slots at once (the periodic checkpoint path):
     one ``device_get`` of the whole cache, then per-slot numpy slicing on
     the host — per-leaf dispatch/transfer overhead is paid once for the
@@ -183,6 +197,8 @@ def offload_slots(cache: Any, bs) -> Dict[int, Dict[str, Any]]:
             else:                                # [n_rep, B, ...]
                 out[key] = arr[:, b:b + 1].copy()
         blobs[b] = _finalize_blob(out)
+        _count_bytes(metrics, "repro_offload_bytes_total",
+                     _blob_nbytes(blobs[b]))
     return blobs
 
 
@@ -234,7 +250,7 @@ def validate_blob(blob: Dict[str, Any], template_keys,
 
 
 def restore_slot(cache: Any, blob: Dict[str, Any], b: int,
-                 rid=None) -> Any:
+                 rid=None, metrics=None) -> Any:
     """Re-admit a previously offloaded slot.  The blob is validated first
     (:func:`validate_blob`): a malformed or bit-flipped blob raises
     :class:`CacheCorruption` describing exactly what is wrong instead of
@@ -252,4 +268,5 @@ def restore_slot(cache: Any, blob: Dict[str, Any], b: int,
     vals = [jnp.asarray(data[k]) for k in keys]
     treedef = jax.tree_util.tree_structure(one)
     restored = jax.tree_util.tree_unflatten(treedef, vals)
+    _count_bytes(metrics, "repro_restore_bytes_total", _blob_nbytes(data))
     return insert_slot(cache, restored, b)

@@ -67,7 +67,9 @@ from repro.serving.fault_inject import FaultPlan, poison_slot
 from repro.serving.faults import (CacheCorruption, DeadlineExceeded,
                                   DivergenceDetected, RequestError,
                                   SlotStalled)
+from repro.serving.metrics import MetricsRegistry
 from repro.serving.prefill import ChunkedPrefill, supports_chunked_prefill
+from repro.serving.profiler import Profiler
 from repro.serving.telemetry import Telemetry
 
 
@@ -273,7 +275,10 @@ class ServingEngine:
                  fault_plan: Optional[FaultPlan] = None,
                  clock: Optional[Callable[[], float]] = None,
                  telemetry: Optional[Telemetry] = None,
-                 trace_path: Optional[str] = None):
+                 trace_path: Optional[str] = None,
+                 warmstart_path: Optional[str] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 profiler: Optional[Profiler] = None):
         if not supports_chunked_prefill(cfg):
             raise ValueError(
                 f"{cfg.name}: no autoregressive serving path (encoder / "
@@ -301,9 +306,18 @@ class ServingEngine:
             else FaultPlan.from_env()
         self._clock = clock or time.monotonic
         # ALL engine timing — deadlines, dispatch latency, checkpoint cost
-        # — reads this one clock, so fake-clock tests see consistent EWMAs
+        # — reads this one clock, so fake-clock tests see consistent EWMAs.
+        # The default Telemetry is keyed by this config's arch name (the
+        # latency table never mixes rungs across archs) and warm-starts
+        # from `warmstart_path` / REPRO_TELEMETRY_WARMSTART when set.
         self.telemetry = telemetry if telemetry is not None else Telemetry(
-            clock=self._clock, trace_path=trace_path)
+            clock=self._clock, trace_path=trace_path, arch=cfg.name,
+            warmstart_path=warmstart_path)
+        self.metrics = metrics if metrics is not None else MetricsRegistry(
+            clock=self._clock)
+        self.profiler = profiler if profiler is not None else Profiler(
+            clock=self._clock)
+        self._init_metrics()
         # bucket-ladder top: the model's largest KV extent (window-capped
         # for rolling archs); None = no KV cache worth bucketing
         self.kv_extent = kv_cache_extent(cfg, max_seq)
@@ -311,7 +325,8 @@ class ServingEngine:
         self.rope_len = rope_len_for(cfg, max_seq)
         self._chunked_prefill = ChunkedPrefill(
             cfg, params, max_seq=max_seq, chunk_size=self.chunk_size,
-            plan=plan, sentinel=self.sentinel, fault_plan=self.faults)
+            plan=plan, sentinel=self.sentinel, fault_plan=self.faults,
+            metrics=self.metrics)
         # slots reserved for the in-flight prefill group: row i of the
         # group lands in slot _pending[i][0] when its prompt completes
         self._pending: List[Tuple[int, Request]] = []
@@ -337,6 +352,49 @@ class ServingEngine:
         # trace+compile and its latency sample must be segregated from
         # the steady-state estimates feeding admission and preemption
         self._decode_seen: set = set()
+        self._max_bucket = -1     # deepest decode rung seen (climb counter)
+
+    def _init_metrics(self) -> None:
+        """Register this engine's instruments on the (possibly shared)
+        registry; get-or-create, so several engines can share one."""
+        m = self.metrics
+        self._m_queue = m.gauge(
+            "repro_queue_depth", "requests waiting for a slot")
+        self._m_live = m.gauge("repro_live_slots", "slots decoding now")
+        self._m_tps = m.gauge(
+            "repro_tokens_per_s", "steady-state token throughput per phase")
+        self._m_submitted = m.counter(
+            "repro_submitted_total", "requests submitted")
+        self._m_admitted = m.counter(
+            "repro_admitted_total", "requests admitted into a prefill group")
+        self._m_finished = m.counter(
+            "repro_finished_total",
+            "terminal requests by status (ok/failed/cancelled/timed_out)")
+        self._m_tokens = m.counter(
+            "repro_tokens_total", "tokens processed per phase")
+        self._m_preempt = m.counter(
+            "repro_preemptions_total", "slot offloads for starved queues")
+        self._m_restore = m.counter(
+            "repro_restores_total", "preempted slots restored")
+        self._m_ckpts = m.counter(
+            "repro_checkpoints_total", "replay checkpoints taken")
+        self._m_ckpt_bytes = m.counter(
+            "repro_checkpoint_bytes_total",
+            "host bytes offloaded by checkpointing")
+        self._m_climbs = m.counter(
+            "repro_bucket_climbs_total",
+            "decode dispatches entering a deeper KV rung (each pays "
+            "trace+compile)")
+        self._m_diverg = m.counter(
+            "repro_divergences_total", "sentinel trips")
+        self._m_replays = m.counter(
+            "repro_replays_total", "checkpoint replays after divergence")
+        self._m_watchdog = m.counter(
+            "repro_watchdog_trips_total", "no-progress watchdog trips")
+        self._m_decode_ms = m.histogram(
+            "repro_decode_burst_ms", "decode burst wall time (ms)")
+        self._m_prefill_ms = m.histogram(
+            "repro_prefill_chunk_ms", "prefill chunk wall time (ms)")
 
     def submit(self, req: Request) -> None:
         # validate here, before admission can pop the request and reserve
@@ -367,6 +425,8 @@ class ServingEngine:
                                   deadline_ms=req.deadline_ms,
                                   t=req.submit_t)
         self.queue.append(req)
+        self._m_submitted.inc()
+        self._m_queue.set(len(self.queue))
 
     # ------------------------------------------------------------ failures
     def _fail(self, req: Request, status: str,
@@ -383,6 +443,7 @@ class ServingEngine:
                                 tokens_out=len(req.out))
         self.stats[{"failed": "failures", "timed_out": "timeouts",
                     "cancelled": "cancelled"}[status]] += 1
+        self._m_finished.labels(status=status).inc()
 
     def _expired(self, req: Request, now: float) -> bool:
         return (req.deadline_ms is not None
@@ -438,7 +499,8 @@ class ServingEngine:
         A corrupted blob fails the REQUEST (CacheCorruption), not the
         engine; returns False and leaves the slot free."""
         try:
-            self.cache = restore_slot(self.cache, req.blob, b, rid=req.rid)
+            self.cache = restore_slot(self.cache, req.blob, b, rid=req.rid,
+                                      metrics=self.metrics)
         except CacheCorruption as e:
             self._fail(req, "failed", e)
             return False
@@ -452,6 +514,7 @@ class ServingEngine:
         req.ckpt_out = len(req.out)
         req.blob = None
         self.stats["restores"] += 1
+        self._m_restore.inc()
         self.telemetry.event(req.rid, "restore", pos=req.resume_pos)
         return True
 
@@ -499,6 +562,8 @@ class ServingEngine:
         if fresh:
             ch.start([r.prompt for r in fresh],
                      batch=self.slots if len(fresh) > 1 else 1)
+            self._m_admitted.inc(len(fresh))
+            self._m_queue.set(len(self.queue))
         stalled = self.faults.active and self.faults.stalled(it)
         if ch.active and not stalled:
             t0 = self._clock()
@@ -520,6 +585,12 @@ class ServingEngine:
                     compiled=info["fresh_compile"])
                 if not info["fresh_compile"]:
                     self._ewma("ewma_prefill_tok_ms", tok_ms)
+                    if tok_ms > 0:
+                        self._m_tps.labels(phase="prefill").set(1e3 / tok_ms)
+                self._m_tokens.labels(phase="prefill").inc(
+                    info["valid_tokens"])
+            self._m_prefill_ms.observe(dt_ms)
+            self.profiler.observe("prefill", dt_ms)
             for row, (b, req) in enumerate(self._pending):
                 if not req.done and info["valid_per_row"][row]:
                     self.telemetry.event(
@@ -607,6 +678,7 @@ class ServingEngine:
         self.queue.append(req)
         self._starved = 0
         self.stats["preemptions"] += 1
+        self._m_preempt.inc()
 
     # --------------------------------------------------------- checkpoints
     def _checkpoint(self, it: int) -> None:
@@ -627,7 +699,8 @@ class ServingEngine:
         # one full-cache transfer for the whole batch of due slots: the
         # per-leaf dispatch overhead of slot-at-a-time offload dominated
         # the healthy-path checkpoint cost
-        blobs = offload_slots(self.cache, [b for b, _ in need])
+        blobs = offload_slots(self.cache, [b for b, _ in need],
+                              metrics=self.metrics)
         for b, req in need:
             blob = blobs[b]
             if self.faults.active:
@@ -637,6 +710,9 @@ class ServingEngine:
             req.ckpt_pos = int(self.pos[b])
             req.ckpt_out = len(req.out)
             self.stats["checkpoints"] += 1
+            self._m_ckpts.inc()
+            self._m_ckpt_bytes.inc(sum(
+                v.nbytes for v in blob.values() if hasattr(v, "nbytes")))
             self.telemetry.event(req.rid, "checkpoint")
         # observability for the < 5% healthy-path overhead budget: the
         # fault smoke gates on ckpt_ms / wall time
@@ -650,12 +726,13 @@ class ServingEngine:
         with ``DivergenceDetected`` — co-batched slots are untouched
         either way."""
         self.stats["divergences"] += 1
+        self._m_diverg.inc()
         self.telemetry.event(req.rid, "fault", detail="decode_divergence")
         if (self.checkpoint_every and req.ckpt_blob is not None
                 and req.replays < 1):
             try:
                 self.cache = restore_slot(self.cache, req.ckpt_blob, b,
-                                          rid=req.rid)
+                                          rid=req.rid, metrics=self.metrics)
             except CacheCorruption as e:
                 self.live[b] = None
                 self._fail(req, "failed", e)
@@ -665,6 +742,7 @@ class ServingEngine:
             del req.out[req.ckpt_out:]
             req.replays += 1
             self.stats["replays"] += 1
+            self._m_replays.inc()
             self.telemetry.event(req.rid, "replay", pos=req.ckpt_pos)
         else:
             self.live[b] = None
@@ -685,6 +763,7 @@ class ServingEngine:
             return
         self._no_progress = 0
         self.stats["watchdog_trips"] += 1
+        self._m_watchdog.inc()
         stuck = [(row, req) for row, (b, req) in enumerate(self._pending)
                  if not req.done]
         if stuck:
@@ -750,6 +829,10 @@ class ServingEngine:
         # KV buckets still compile on their first burst) pays trace+compile
         fresh_compile = kv_bucket not in self._decode_seen
         self._decode_seen.add(kv_bucket)
+        if kv_bucket is not None and kv_bucket > self._max_bucket:
+            if self._max_bucket >= 0:
+                self._m_climbs.inc()
+            self._max_bucket = kv_bucket
         t0 = self._clock()
         out = self._decode_n(self.params, self.cache,
                              jnp.asarray(self.tokens), n=kblk,
@@ -772,8 +855,12 @@ class ServingEngine:
         # (it used to: fresh_compile was computed but never gated here)
         self.telemetry.record_latency("decode", kv_bucket, dt_ms / kblk,
                                       compiled=fresh_compile)
+        self._m_decode_ms.observe(dt_ms)
+        self.profiler.observe("decode", dt_ms)
         if not fresh_compile:
             self._ewma("ewma_tpot_ms", dt_ms / kblk)
+            if dt_ms > 0:
+                self._m_tps.labels(phase="decode").set(kblk * 1e3 / dt_ms)
         n_live = 0
         decoded = 0
         for b, req in enumerate(self.live):
@@ -799,12 +886,16 @@ class ServingEngine:
                 req.status = "ok"
                 req.ckpt_blob = None
                 self.finished.append(req)
+                self._m_finished.labels(status="ok").inc()
                 self.telemetry.end_span(req.rid, "ok",
                                         tokens_out=len(req.out))
                 self.live[b] = None
             else:
                 n_live += 1
         self.stats["decode_tokens"] += decoded
+        self._m_tokens.labels(phase="decode").inc(decoded)
+        self._m_live.set(n_live)
+        self._m_queue.set(len(self.queue))
         if chunk_ran:
             # interleaving fairness: iterations where a prefill chunk ran
             # alongside live decode slots, and whether decode progressed
@@ -819,13 +910,38 @@ class ServingEngine:
         ``max_iters`` is the escape hatch over the watchdog: past it, all
         in-flight and queued requests are cancelled (``SlotStalled``
         records the bound) and the engine returns instead of hanging."""
-        while self.step() or self.queue or self._open_pending():
-            if max_iters is not None and self.stats["iters"] >= max_iters:
-                self._abort_inflight("cancelled", SlotStalled(
-                    f"run(max_iters={max_iters}) exhausted with work "
-                    "outstanding"))
-                break
+        try:
+            while self.step() or self.queue or self._open_pending():
+                if max_iters is not None and self.stats["iters"] >= max_iters:
+                    self._abort_inflight("cancelled", SlotStalled(
+                        f"run(max_iters={max_iters}) exhausted with work "
+                        "outstanding"))
+                    break
+        finally:
+            # persist the measured latency model for the next process and
+            # flush metrics — both no-ops unless a path is configured
+            self.telemetry.save_warmstart()
+            self.metrics.export()
         return self.finished
+
+    def profile_snapshot(self) -> Dict[str, Any]:
+        """The profiler's per-kernel-family attribution.  In coarse mode
+        the representative decode program is registered lazily here (its
+        lowering cost lands on the caller asking for shares, never on the
+        serving hot path)."""
+        if (self.profiler.mode == "coarse"
+                and not self.profiler.registered("decode")
+                and self._decode_seen):
+            kv_bucket = max((b for b in self._decode_seen if b is not None),
+                            default=None)
+            # re-lowering through the engine's own jitted wrapper hits the
+            # executable cache for shapes the loop already ran
+            lowered = self._decode_n.lower(
+                self.params, self.cache, jnp.asarray(self.tokens),
+                n=self.decode_block, kv_bucket=kv_bucket,
+                rope_len=self.rope_len, with_sentinel=self.sentinel)
+            self.profiler.register("decode", lowered.compile())
+        return self.profiler.snapshot()
 
     def _abort_inflight(self, status: str, err: RequestError) -> None:
         for req in self.queue:

@@ -232,7 +232,7 @@ class ChunkedPrefill:
     def __init__(self, cfg: ModelConfig, params, *, max_seq: int,
                  chunk_size: int = 256,
                  plan: Optional[ShardingPlan] = None,
-                 sentinel: bool = True, fault_plan=None):
+                 sentinel: bool = True, fault_plan=None, metrics=None):
         if not supports_chunked_prefill(cfg):
             raise ValueError(f"{cfg.name}: architecture does not support "
                              "chunked prefill")
@@ -263,6 +263,17 @@ class ChunkedPrefill:
         # facts about the most recent step(), for the engine's telemetry:
         # {"bucket", "valid_tokens", "valid_per_row", "fresh_compile"}
         self.last_chunk: Optional[Dict[str, Any]] = None
+        # optional shared MetricsRegistry (the engine passes its own)
+        self._m_chunks = self._m_quar = self._m_rows = None
+        if metrics is not None:
+            self._m_chunks = metrics.counter(
+                "repro_prefill_chunks_total", "prefill chunks dispatched")
+            self._m_quar = metrics.counter(
+                "repro_prefill_rows_quarantined_total",
+                "group rows removed by the prefill divergence sentinel")
+            self._m_rows = metrics.gauge(
+                "repro_prefill_group_rows",
+                "rows still prefilling in the in-flight group")
 
     @property
     def active(self) -> bool:
@@ -347,6 +358,8 @@ class ChunkedPrefill:
                            "valid_per_row": np.asarray(clens),
                            "fresh_compile": combo not in self._dispatched}
         self._dispatched.add(combo)
+        if self._m_chunks is not None:
+            self._m_chunks.inc()
         out = self._step(self.params, ctoks, jnp.asarray(clens), g["cache"],
                          kv_bucket=kv_bucket, rope_len=self.rope_len,
                          with_sentinel=self.sentinel)
@@ -362,6 +375,8 @@ class ChunkedPrefill:
                 for r in np.nonzero(bad)[0]:
                     diverged.append(int(r))
                     self.cancel_row(int(r))
+                if self._m_quar is not None:
+                    self._m_quar.inc(len(diverged))
         else:
             logits, g["cache"] = out
         g["idx"] += 1
@@ -374,8 +389,12 @@ class ChunkedPrefill:
             emitted = [(int(r), int(nxt[r]), int(g["lens"][r]))
                        for r in np.nonzero(fin)[0]]
             g["emitted"] |= fin
+        if self._m_rows is not None:
+            self._m_rows.set(int((~g["emitted"][:g["k"]]).sum()))
         return emitted, g["idx"] >= g["n_chunks"], diverged
 
     def finish(self) -> None:
         """Retire the completed group (template is reused by the next)."""
         self._group = None
+        if self._m_rows is not None:
+            self._m_rows.set(0)

@@ -1,5 +1,6 @@
-"""Structured serving telemetry: the per-(phase, KV-bucket) latency model,
-per-request span traces, and static operator-level cost attribution.
+"""Structured serving telemetry: the per-(arch, phase, KV-bucket) latency
+model, per-request span traces, and static operator-level cost
+attribution.
 
 The paper's core contribution is *operator-level* characterization —
 selective-scan kernels account for >55% of edge-inference latency, and
@@ -13,8 +14,10 @@ climb could spuriously time out every queued request.
 
 This module replaces the scalars with three layers:
 
-* **Latency table** — one :class:`PhaseBucketStats` per
-  ``(phase, kv_bucket)`` key (phases: ``prefill`` / ``decode``; bucket =
+* **Latency table** — :class:`TelemetryTable`, one
+  :class:`PhaseBucketStats` per ``(arch, phase, kv_bucket)`` key
+  (arch = the model config name, so one table can serve several configs
+  without mixing their rungs; phases: ``prefill`` / ``decode``; bucket =
   the static KV rung the compiled program ran under, ``None`` for
   architectures without a KV cache).  Each entry keeps TWO
   :class:`LatencyRecord` s — ``steady`` and ``compile`` — so
@@ -23,7 +26,13 @@ This module replaces the scalars with three layers:
   record is the only one feeding scheduling.  :meth:`Telemetry.estimate`
   answers "expected ms/token for this phase at this bucket" from the
   bucket's steady record, falling back to the phase-global steady record
-  when the bucket has no samples yet.
+  *within the same arch* — never across archs.  The table round-trips
+  through a versioned JSON blob (:meth:`TelemetryTable.save` /
+  :meth:`TelemetryTable.load`), so a new engine warm-starts deadline
+  admission and preemption slack from a previous run's measured model
+  (``REPRO_TELEMETRY_WARMSTART``) instead of cold scalars; corrupt or
+  version-mismatched blobs are rejected with a logged warning and the
+  table stays cold.
 * **Span traces** — per-request event timelines (queued -> prefill
   chunks -> decode bursts -> terminal state, with bucket, preemption,
   checkpoint, replay and fault events).  Consecutive same-phase
@@ -31,14 +40,16 @@ This module replaces the scalars with three layers:
   ``bursts``/``tokens`` counters, split whenever the bucket climbs), so
   spans stay O(ladder rungs), not O(tokens).  When ``REPRO_TRACE_PATH``
   is set (or ``trace_path`` is passed), each finished span is appended
-  to that file as one JSON line.
+  to that file as one JSON line carrying ``version`` + ``arch``;
+  :func:`read_trace` rejects lines written by an incompatible schema.
 * **Operator attribution** — :func:`operator_costs` maps a compiled XLA
   program to flop/byte totals (via the version-portable
   :func:`repro.core.hlo_analysis.xla_cost_dict`) plus per-kernel-family
   shares (gemm / ssm / norm / memory / arith / collective) from the
   trip-count-corrected HLO walk — the paper's Table-style operator
   breakdown, derived statically so benchmarks can report it without a
-  profiler.
+  profiler.  The *measured* counterpart lives in
+  :mod:`repro.serving.profiler`.
 
 All timestamps come from the injected ``clock`` (the engine passes its
 own, so fault-injection tests with a fake clock see one consistent time
@@ -47,12 +58,26 @@ base across deadlines, latency samples and trace spans).
 from __future__ import annotations
 
 import json
+import logging
 import os
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+log = logging.getLogger("repro.serving.telemetry")
+
 # phases a latency key may carry (order = pipeline order)
 PHASES = ("prefill", "decode")
+
+#: schema version for trace JSONL lines AND latency snapshots; bumped to 2
+#: when the table became arch-keyed (v1 lines have no arch and would be
+#: misattributed — read_trace rejects them)
+TRACE_SCHEMA_VERSION = 2
+
+#: schema version of the warm-start blob (arch-keyed table serialization)
+TELEMETRY_BLOB_VERSION = 1
+
+#: arch key used when the caller never names one (single-config benches)
+DEFAULT_ARCH = "default"
 
 
 @dataclass
@@ -76,12 +101,20 @@ class LatencyRecord:
                 "min_ms": None if self.count == 0 else self.min_ms,
                 "max_ms": None if self.count == 0 else self.max_ms}
 
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "LatencyRecord":
+        count = int(d.get("count", 0))
+        return cls(ewma_ms=float(d.get("ewma_ms", 0.0)), count=count,
+                   min_ms=(float("inf") if d.get("min_ms") is None
+                           else float(d["min_ms"])),
+                   max_ms=float(d.get("max_ms") or 0.0))
+
 
 @dataclass
 class PhaseBucketStats:
-    """Latency for one (phase, kv_bucket) key: steady-state samples and
-    first-dispatch (trace+compile) samples, segregated — only ``steady``
-    ever feeds admission/preemption estimates."""
+    """Latency for one (arch, phase, kv_bucket) key: steady-state samples
+    and first-dispatch (trace+compile) samples, segregated — only
+    ``steady`` ever feeds admission/preemption estimates."""
 
     steady: LatencyRecord = field(default_factory=LatencyRecord)
     compile: LatencyRecord = field(default_factory=LatencyRecord)
@@ -89,6 +122,11 @@ class PhaseBucketStats:
     def as_dict(self) -> Dict[str, Any]:
         return {"steady": self.steady.as_dict(),
                 "compile": self.compile.as_dict()}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PhaseBucketStats":
+        return cls(steady=LatencyRecord.from_dict(d.get("steady", {})),
+                   compile=LatencyRecord.from_dict(d.get("compile", {})))
 
 
 def _bucket_key(bucket: Optional[int]) -> int:
@@ -100,70 +138,189 @@ def _bucket_key(bucket: Optional[int]) -> int:
 GLOBAL_KEY = "*"
 
 
+def _parse_key(s: str):
+    return GLOBAL_KEY if s == GLOBAL_KEY else int(s)
+
+
+class TelemetryTable:
+    """The per-(arch, phase, kv_bucket) latency table, shareable across
+    several :class:`Telemetry` fronts (one engine per arch) and
+    persistable as a versioned JSON blob for cross-process warm starts.
+    """
+
+    def __init__(self, alpha: float = 0.25):
+        self.alpha = float(alpha)
+        # {(arch, phase, bucket_key) -> PhaseBucketStats}; bucket
+        # GLOBAL_KEY is the per-(arch, phase) aggregate estimates fall
+        # back to — never across archs
+        self._lat: Dict[Tuple[str, str, Any], PhaseBucketStats] = {}
+
+    def _entry(self, arch: str, phase: str, key) -> PhaseBucketStats:
+        if (arch, phase, key) not in self._lat:
+            self._lat[(arch, phase, key)] = PhaseBucketStats()
+        return self._lat[(arch, phase, key)]
+
+    def record(self, arch: str, phase: str, bucket: Optional[int],
+               tok_ms: float, *, compiled: bool = False) -> None:
+        for key in (_bucket_key(bucket), GLOBAL_KEY):
+            rec = self._entry(arch, phase, key)
+            (rec.compile if compiled else rec.steady).observe(
+                tok_ms, self.alpha)
+
+    def estimate(self, arch: str, phase: str,
+                 bucket: Optional[int]) -> Optional[float]:
+        for key in (_bucket_key(bucket), GLOBAL_KEY):
+            rec = self._lat.get((arch, phase, key))
+            if rec is not None and rec.steady.count > 0:
+                return rec.steady.ewma_ms
+        return None
+
+    def archs(self) -> List[str]:
+        return sorted({arch for (arch, _, _) in self._lat})
+
+    def snapshot(self, arch: str) -> Dict[str, Dict[str, Any]]:
+        """One arch's slice as ``{"decode@256": {...}, ...}``."""
+        return {f"{phase}@{key}": rec.as_dict()
+                for (a, phase, key), rec in sorted(
+                    self._lat.items(),
+                    key=lambda kv: (kv[0][0], kv[0][1], str(kv[0][2])))
+                if a == arch}
+
+    # ------------------------------------------------------- persistence
+    def as_blob(self) -> Dict[str, Any]:
+        archs: Dict[str, Dict[str, Any]] = {}
+        for (arch, phase, key), rec in self._lat.items():
+            archs.setdefault(arch, {})[f"{phase}@{key}"] = rec.as_dict()
+        return {"version": TELEMETRY_BLOB_VERSION, "alpha": self.alpha,
+                "archs": {a: dict(sorted(v.items()))
+                          for a, v in sorted(archs.items())}}
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.as_blob(), f, indent=1)
+        return path
+
+    def load(self, path: str) -> int:
+        """Merge a saved blob into this table (saved entries overwrite
+        same-key entries).  Raises ``ValueError`` on corrupt JSON, a
+        structurally invalid blob, or a version mismatch — callers log
+        and stay cold.  Returns the number of entries loaded."""
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+        except (OSError, ValueError) as e:
+            raise ValueError(
+                f"telemetry warm-start blob {path!r} unreadable: {e}")
+        if not isinstance(blob, dict):
+            raise ValueError(
+                f"telemetry warm-start blob {path!r}: expected an object, "
+                f"got {type(blob).__name__}")
+        version = blob.get("version")
+        if version != TELEMETRY_BLOB_VERSION:
+            raise ValueError(
+                f"telemetry warm-start blob {path!r} has version "
+                f"{version!r}, expected {TELEMETRY_BLOB_VERSION}")
+        archs = blob.get("archs")
+        if not isinstance(archs, dict):
+            raise ValueError(
+                f"telemetry warm-start blob {path!r}: missing 'archs'")
+        loaded = 0
+        try:
+            for arch, table in archs.items():
+                for pk, rec in table.items():
+                    phase, _, key_s = pk.partition("@")
+                    self._lat[(arch, phase, _parse_key(key_s))] = \
+                        PhaseBucketStats.from_dict(rec)
+                    loaded += 1
+        except (AttributeError, KeyError, TypeError, ValueError) as e:
+            raise ValueError(
+                f"telemetry warm-start blob {path!r} malformed: {e}")
+        return loaded
+
+
 class Telemetry:
-    """Metrics + tracing hub for one :class:`ServingEngine` (or bench).
+    """Metrics + tracing front for one :class:`ServingEngine` (or bench),
+    bound to one ``arch`` over a (possibly shared) :class:`TelemetryTable`.
 
     ``clock`` is the time base (seconds); ``alpha`` the EWMA smoothing
     factor shared by every record; ``trace_path`` enables JSONL span
     export (defaults to the ``REPRO_TRACE_PATH`` env var, read once at
-    construction).
+    construction); ``warmstart_path`` (default: the
+    ``REPRO_TELEMETRY_WARMSTART`` env var) names a blob to load at
+    construction — if it exists — and to save via
+    :meth:`save_warmstart`.  A bad blob logs a warning and leaves the
+    table cold; it never raises out of the constructor.
     """
 
     def __init__(self, clock: Optional[Callable[[], float]] = None,
                  alpha: float = 0.25,
-                 trace_path: Optional[str] = None):
+                 trace_path: Optional[str] = None,
+                 arch: str = DEFAULT_ARCH,
+                 table: Optional[TelemetryTable] = None,
+                 warmstart_path: Optional[str] = None):
         import time
         self._clock = clock or time.monotonic
-        self.alpha = float(alpha)
+        self.arch = arch
+        self.table = table if table is not None else TelemetryTable(alpha)
+        self.alpha = self.table.alpha
         self.trace_path = (trace_path if trace_path is not None
                            else os.environ.get("REPRO_TRACE_PATH") or None)
-        # {(phase, bucket_key) -> PhaseBucketStats}; bucket GLOBAL_KEY is
-        # the per-phase aggregate the estimate falls back to
-        self._lat: Dict[Tuple[str, Any], PhaseBucketStats] = {}
+        self.warmstart_path = (
+            warmstart_path if warmstart_path is not None
+            else os.environ.get("REPRO_TELEMETRY_WARMSTART") or None)
+        self.warmstart_loaded = False
+        if self.warmstart_path and os.path.exists(self.warmstart_path):
+            try:
+                n = self.table.load(self.warmstart_path)
+            except ValueError as e:
+                log.warning("telemetry warm-start rejected (cold start): %s",
+                            e)
+            else:
+                self.warmstart_loaded = True
+                log.info("telemetry warm-start: %d entries from %s",
+                         n, self.warmstart_path)
         self._spans: Dict[int, Dict[str, Any]] = {}    # rid -> open span
         self.finished_spans: List[Dict[str, Any]] = []
 
     # ------------------------------------------------------- latency table
-    def _entry(self, phase: str, key) -> PhaseBucketStats:
-        if (phase, key) not in self._lat:
-            self._lat[(phase, key)] = PhaseBucketStats()
-        return self._lat[(phase, key)]
-
     def record_latency(self, phase: str, bucket: Optional[int],
                        tok_ms: float, *, compiled: bool = False) -> None:
         """One per-token latency sample for ``phase`` under ``bucket``.
         ``compiled=True`` marks a first-dispatch (trace+compile) sample:
         it lands in the segregated compile record and NEVER moves the
         steady-state estimate."""
-        for key in (_bucket_key(bucket), GLOBAL_KEY):
-            rec = self._entry(phase, key)
-            (rec.compile if compiled else rec.steady).observe(
-                tok_ms, self.alpha)
+        self.table.record(self.arch, phase, bucket, tok_ms,
+                          compiled=compiled)
 
     def estimate(self, phase: str, bucket: Optional[int]) -> Optional[float]:
-        """Steady-state ms/token for ``phase`` at ``bucket``; falls back
-        to the phase-global steady record when the bucket is unmeasured;
-        None when the phase has no steady samples at all."""
-        for key in (_bucket_key(bucket), GLOBAL_KEY):
-            rec = self._lat.get((phase, key))
-            if rec is not None and rec.steady.count > 0:
-                return rec.steady.ewma_ms
-        return None
+        """Steady-state ms/token for this arch's ``phase`` at ``bucket``;
+        falls back to the same arch's phase-global steady record when the
+        bucket is unmeasured; None when the phase has no steady samples
+        at all.  Never reads another arch's rungs."""
+        return self.table.estimate(self.arch, phase, bucket)
 
-    def latency_snapshot(self) -> Dict[str, Dict[str, Any]]:
-        """JSON-able view of the whole table:
-        ``{"decode@256": {"steady": {...}, "compile": {...}}, ...}``
-        (``@*`` = phase-global aggregate, ``@-1`` = unbucketed)."""
-        return {f"{phase}@{key}": rec.as_dict()
-                for (phase, key), rec in sorted(
-                    self._lat.items(), key=lambda kv: (kv[0][0],
-                                                       str(kv[0][1])))}
+    def latency_snapshot(self) -> Dict[str, Any]:
+        """JSON-able view of this arch's slice of the table:
+        ``{"version": 2, "arch": ..., "table": {"decode@256": {...},
+        ...}}`` (``@*`` = phase-global aggregate, ``@-1`` =
+        unbucketed)."""
+        return {"version": TRACE_SCHEMA_VERSION, "arch": self.arch,
+                "table": self.table.snapshot(self.arch)}
+
+    def save_warmstart(self, path: Optional[str] = None) -> Optional[str]:
+        """Persist the (shared) table for the next process; returns the
+        path written, or None when no path is configured."""
+        path = path or self.warmstart_path
+        if not path:
+            return None
+        return self.table.save(path)
 
     # -------------------------------------------------------- span traces
     def begin_span(self, rid: int, *, prompt_len: int, max_new: int,
                    deadline_ms: Optional[float] = None,
                    t: Optional[float] = None) -> None:
         self._spans[rid] = {
+            "version": TRACE_SCHEMA_VERSION, "arch": self.arch,
             "rid": rid, "submit_t": self._clock() if t is None else t,
             "prompt_len": int(prompt_len), "max_new": int(max_new),
             "deadline_ms": deadline_ms, "status": "pending", "events": []}
@@ -249,11 +406,20 @@ def operator_costs(compiled) -> Dict[str, Any]:
 
 def read_trace(path: str) -> List[Dict[str, Any]]:
     """Load a JSONL span trace written via ``REPRO_TRACE_PATH`` (one span
-    object per line; blank lines ignored)."""
+    object per line; blank lines ignored).  Raises ``ValueError`` when a
+    line carries a different schema ``version`` — stale traces from an
+    earlier (or later) layout must not be silently misread."""
     spans = []
     with open(path) as f:
-        for line in f:
+        for i, line in enumerate(f):
             line = line.strip()
-            if line:
-                spans.append(json.loads(line))
+            if not line:
+                continue
+            span = json.loads(line)
+            v = span.get("version")
+            if v != TRACE_SCHEMA_VERSION:
+                raise ValueError(
+                    f"{path}:{i + 1}: trace span has schema version {v!r}, "
+                    f"expected {TRACE_SCHEMA_VERSION} — stale trace file?")
+            spans.append(span)
     return spans

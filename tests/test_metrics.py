@@ -1,0 +1,188 @@
+"""Metrics registry: counter/gauge/histogram semantics, label children,
+Prometheus text escaping, snapshot purity, and the export paths — plus
+the engine integration (instruments actually move during a serving run).
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.config import AttnConfig, ModelConfig, SSMConfig
+from repro.models.lm import init_lm_params
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.metrics import (METRICS_SCHEMA_VERSION, Counter, Gauge,
+                                   Histogram, MetricsRegistry)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ----------------------------------------------------------- instruments
+
+def test_counter_semantics():
+    m = MetricsRegistry()
+    c = m.counter("reqs_total", "requests")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == pytest.approx(3.5)
+    with pytest.raises(ValueError, match=">= 0"):
+        c.inc(-1)
+    # labelled children are independent series; the default is untouched
+    c.labels(status="ok").inc(4)
+    c.labels(status="bad").inc()
+    assert c.labels(status="ok").value == 4
+    assert c.labels(status="bad").value == 1
+    assert c.value == pytest.approx(3.5)
+    # same label set -> same cached child
+    assert c.labels(status="ok") is c.labels(status="ok")
+
+
+def test_gauge_semantics():
+    g = MetricsRegistry().gauge("queue_depth")
+    g.set(7)
+    g.inc()
+    g.dec(3)
+    assert g.value == 5.0
+    g.set(-2.5)                     # gauges may go negative
+    assert g.value == -2.5
+
+
+def test_histogram_buckets_cumulative_with_inf_rail():
+    h = MetricsRegistry().histogram("lat_ms", buckets=(1.0, 5.0, 10.0))
+    for v in (0.2, 0.9, 3.0, 7.0, 100.0):
+        h.observe(v)
+    child = h.labels()
+    assert child.count == 5
+    assert child.sum == pytest.approx(111.1)
+    cum = dict(child.cumulative())
+    assert cum["1.0"] == 2          # 0.2, 0.9
+    assert cum["5.0"] == 3          # + 3.0
+    assert cum["10.0"] == 4         # + 7.0
+    assert cum["+Inf"] == 5         # + 100.0 (over the last bound)
+    with pytest.raises(ValueError, match=">= 1 bucket"):
+        MetricsRegistry().histogram("empty", buckets=())
+
+
+def test_get_or_create_and_type_conflicts():
+    m = MetricsRegistry()
+    a = m.counter("x_total", "first registration wins")
+    b = m.counter("x_total", "ignored help")
+    assert a is b and a.help == "first registration wins"
+    assert isinstance(m.gauge("g"), Gauge)
+    assert isinstance(m.histogram("h"), Histogram)
+    with pytest.raises(ValueError, match="already registered as counter"):
+        m.gauge("x_total")
+    with pytest.raises(ValueError, match="already registered as gauge"):
+        m.histogram("g")
+
+
+# ------------------------------------------------------- snapshot/export
+
+def test_snapshot_idempotent_and_pure():
+    m = MetricsRegistry()
+    m.counter("c_total").inc(3)
+    m.gauge("g").set(1.5)
+    m.histogram("h", buckets=(1.0,)).observe(0.5)
+    s1 = m.snapshot()
+    s2 = m.snapshot()
+    assert s1 == s2
+    assert s1["version"] == METRICS_SCHEMA_VERSION
+    # mutating a snapshot never reaches the registry
+    s1["metrics"]["c_total"]["samples"][0]["value"] = 999
+    assert m.snapshot()["metrics"]["c_total"]["samples"][0]["value"] == 3
+    # updates show up in the NEXT snapshot only
+    m.counter("c_total").inc()
+    assert m.snapshot()["metrics"]["c_total"]["samples"][0]["value"] == 4
+
+
+def test_prometheus_text_format_and_escaping():
+    m = MetricsRegistry()
+    c = m.counter("req_total", 'help with "quotes" and \\slash\nline2')
+    c.labels(name='va"l\\ue\nx').inc(2)
+    m.histogram("lat_ms", "latency", buckets=(1.0,)).observe(0.5)
+    text = m.to_prometheus()
+    # HELP escapes backslash + newline, leaves quotes alone
+    assert ('# HELP req_total help with "quotes" and '
+            "\\\\slash\\nline2") in text
+    assert "# TYPE req_total counter" in text
+    # label VALUES escape backslash, quote and newline
+    assert 'req_total{name="va\\"l\\\\ue\\nx"} 2' in text
+    assert 'lat_ms_bucket{le="1.0"} 1' in text
+    assert 'lat_ms_bucket{le="+Inf"} 1' in text
+    assert "lat_ms_sum 0.5" in text
+    assert "lat_ms_count 1" in text
+
+
+def test_export_jsonl_appends_and_prom_overwrites(tmp_path):
+    jsonl = str(tmp_path / "metrics.jsonl")
+    t = iter([10.0, 20.0, 30.0])
+    m = MetricsRegistry(clock=lambda: next(t), path=jsonl)
+    m.counter("c_total").inc()
+    assert m.export() == jsonl
+    m.counter("c_total").inc()
+    m.export()
+    lines = [json.loads(x) for x in open(jsonl)]
+    assert [ln["t"] for ln in lines] == [10.0, 20.0]
+    assert [ln["version"] for ln in lines] == [METRICS_SCHEMA_VERSION] * 2
+    assert lines[1]["metrics"]["c_total"]["samples"][0]["value"] == 2
+    # .prom suffix switches to (overwritten) Prometheus text
+    prom = str(tmp_path / "metrics.prom")
+    m.export(prom)
+    m.export(prom)
+    text = open(prom).read()
+    assert text.count("# TYPE c_total counter") == 1
+    # export(None) falls back to the registry default path
+    assert m.export(None) == jsonl
+    assert MetricsRegistry(path=None).export() is None
+
+
+# ------------------------------------------------------ engine threading
+
+def _cfg():
+    return ModelConfig(name="hyb", family="hybrid", n_layers=4, d_model=64,
+                       d_ff=0, vocab_size=97,
+                       ssm=SSMConfig(d_state=16, headdim=16, chunk=8),
+                       layer_pattern=("mamba2", "mamba2+shared"),
+                       shared_attn=AttnConfig(n_heads=4, n_kv_heads=4,
+                                              head_dim=16),
+                       shared_attn_d_ff=128, vocab_pad_multiple=16)
+
+
+def test_engine_threads_metrics_through_serving_run(tmp_path):
+    cfg = _cfg()
+    params = init_lm_params(cfg, KEY)
+    path = str(tmp_path / "metrics.jsonl")
+    eng = ServingEngine(cfg, params, slots=2, max_seq=96, decode_block=4,
+                        chunk_size=16, checkpoint_every=4,
+                        metrics=MetricsRegistry(path=path))
+    rng = np.random.default_rng(0)
+    for i, n in enumerate((20, 12)):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(2, 97, n).astype(np.int32),
+                           max_new=12))
+    done = eng.run(max_iters=500)
+    assert all(r.status == "ok" for r in done)
+    snap = eng.metrics.snapshot()["metrics"]
+
+    def val(name, **labels):
+        want = sorted((k, v) for k, v in labels.items())
+        for s in snap[name]["samples"]:
+            if sorted(s["labels"].items()) == want:
+                return s.get("value", s.get("count"))
+        return None
+
+    assert val("repro_submitted_total") == 2
+    assert val("repro_admitted_total") == 2
+    assert val("repro_finished_total", status="ok") == 2
+    assert val("repro_tokens_total", phase="decode") > 0
+    assert val("repro_tokens_total", phase="prefill") == 32
+    assert val("repro_checkpoints_total") > 0
+    assert val("repro_checkpoint_bytes_total") > 0
+    assert val("repro_offload_bytes_total") > 0
+    assert snap["repro_decode_burst_ms"]["samples"][0]["count"] > 0
+    assert snap["repro_prefill_chunk_ms"]["samples"][0]["count"] > 0
+    assert val("repro_queue_depth") == 0        # drained at the end
+    # run() flushed one JSONL line to REPRO_METRICS_PATH-equivalent
+    lines = [json.loads(x) for x in open(path)]
+    assert len(lines) == 1
+    assert lines[0]["metrics"]["repro_finished_total"]["samples"]

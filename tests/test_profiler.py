@@ -1,0 +1,170 @@
+"""Measured profiler: op-name -> kernel-family mapping, the Chrome-trace
+parser (on a canned fixture: container exclusion, host-thread filtering,
+unknown-op residual), coarse-mode apportioning, and an end-to-end trace
+window on this host's jax.
+"""
+import gzip
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.serving.profiler import (PROFILE_SCHEMA_VERSION, FamilyTimes,
+                                    Profiler, family_map, parse_trace_dir,
+                                    static_family_weights)
+
+
+def _compiled():
+    fn = jax.jit(lambda a, b: jnp.tanh(jnp.dot(a, b)))
+    x = jnp.ones((64, 64), jnp.float32)
+    return fn.lower(x, x).compile()
+
+
+def test_family_map_covers_compiled_ops_with_operator_costs_taxonomy():
+    fmap = family_map(_compiled().as_text())
+    assert fmap                        # every op of every computation
+    fams = set(fmap.values())
+    assert "gemm" in fams              # the dot
+    assert fams <= {"gemm", "ssm", "norm", "memory", "arith", "collective",
+                    "other", "__container__"}
+    weights = static_family_weights(_compiled().as_text())
+    assert weights.get("gemm", 0) > 0.5
+    assert sum(weights.values()) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------- trace parser
+
+def _trace_file(tmp_path, events):
+    d = tmp_path / "plugins" / "profile" / "2026_01_01"
+    d.mkdir(parents=True)
+    with gzip.open(d / "host.trace.json.gz", "wt") as f:
+        json.dump({"traceEvents": events}, f)
+    return str(tmp_path)
+
+
+def test_parse_trace_attributes_device_events_only(tmp_path):
+    fmap = {"dot.1": "gemm", "tanh.2": "arith", "while.3": "__container__"}
+    dev = {"pid": 1, "tid": 10}
+    host = {"pid": 1, "tid": 99}
+    events = [
+        # device thread: known ops + one unknown + one container
+        {"ph": "X", "name": "dot.1", "dur": 1000, **dev},
+        {"ph": "X", "name": "dot.1", "dur": 500, **dev},
+        {"ph": "X", "name": "tanh.2", "dur": 250, **dev},
+        {"ph": "X", "name": "mystery.9", "dur": 100, **dev},
+        # the while wraps the ops above: attributing it would double count
+        {"ph": "X", "name": "while.3", "dur": 1850, **dev},
+        # host python thread: never touched (no known op on that tid)
+        {"ph": "X", "name": "PyCall", "dur": 99999, **host},
+        # non-duration phases are skipped
+        {"ph": "M", "name": "process_name", **dev},
+    ]
+    res = parse_trace_dir(_trace_file(tmp_path, events), fmap)
+    assert res.ms["gemm"] == pytest.approx(1.5)       # 1500us -> ms
+    assert res.ms["arith"] == pytest.approx(0.25)
+    assert res.events == 3
+    # unknown op ON a device thread -> unattributed; host events ignored
+    assert res.unattributed_ms == pytest.approx(0.1)
+    shares = res.shares()
+    assert shares["gemm"] == pytest.approx(1.5 / 1.75)
+    assert sum(shares.values()) == pytest.approx(1.0)
+
+
+def test_parse_trace_empty_or_garbled_dir(tmp_path):
+    assert parse_trace_dir(str(tmp_path), {"x": "gemm"}).events == 0
+    bad = tmp_path / "a.trace.json.gz"
+    bad.write_bytes(b"not gzip")
+    assert parse_trace_dir(str(tmp_path), {"x": "gemm"}).events == 0
+
+
+# ------------------------------------------------------------- modes
+
+def test_off_mode_is_a_no_op():
+    prof = Profiler(mode="off")
+    assert not prof.enabled
+    with prof.window("k") as ft:
+        pass
+    assert ft.ms == {} and ft.mode == "off"
+    prof.observe("k", 5.0)
+    snap = prof.snapshot()
+    assert snap["coarse"] == {} and snap["windows"] == {}
+    assert snap["version"] == PROFILE_SCHEMA_VERSION
+
+
+def test_invalid_mode_rejected():
+    with pytest.raises(ValueError, match="REPRO_PROFILE"):
+        Profiler(mode="verbose")
+
+
+def test_coarse_mode_apportions_by_static_weights():
+    clock = iter([0.0, 0.010, 0.010, 0.010])    # 10ms window
+    prof = Profiler(mode="coarse", clock=lambda: next(clock))
+    prof.register("k", _compiled())
+    assert prof.registered("k")
+    with prof.window("k") as ft:
+        pass
+    assert ft.wall_ms == pytest.approx(10.0)
+    assert ft.mode == "coarse"
+    assert sum(ft.shares().values()) == pytest.approx(1.0)
+    weights = static_family_weights(_compiled().as_text())
+    for fam, w in weights.items():
+        assert ft.ms[fam] == pytest.approx(10.0 * w)
+    # unregistered keys leave the wall time unattributed, shares empty
+    clock2 = iter([0.0, 0.004, 0.004, 0.004])
+    prof2 = Profiler(mode="coarse", clock=lambda: next(clock2))
+    with prof2.window("unknown") as ft2:
+        pass
+    assert ft2.shares() == {}
+    assert ft2.unattributed_ms == pytest.approx(4.0)
+
+
+def test_observe_accumulates_and_tracks_overhead():
+    prof = Profiler(mode="coarse")
+    prof.register("decode", _compiled())
+    for _ in range(10):
+        prof.observe("decode", 2.0)
+    snap = prof.snapshot()
+    rec = snap["coarse"]["decode"]
+    assert rec["dispatches"] == 10
+    assert rec["wall_ms"] == pytest.approx(20.0)
+    assert sum(rec["shares"].values()) == pytest.approx(1.0)
+    # bookkeeping self-time is measured and tiny vs the observed wall
+    assert 0.0 <= prof.overhead_ms < 0.03 * 20.0
+
+
+def test_trace_window_end_to_end_measures_gemm_dominance():
+    """Real jax.profiler capture on this host: the dot-dominated program
+    must attribute most device time to the gemm family; if the host
+    yields no usable trace the window degrades (flagged) to static
+    apportioning — either way shares exist and sum to 1."""
+    prof = Profiler(mode="trace")
+    fn = jax.jit(lambda a, b: jnp.tanh(jnp.dot(a, b)))
+    x = jnp.ones((256, 256), jnp.float32)
+    jax.block_until_ready(fn(x, x))                    # compile outside
+    prof.register("k", fn.lower(x, x).compile())
+    with prof.window("k") as ft:
+        for _ in range(50):
+            jax.block_until_ready(fn(x, x))
+    shares = ft.shares()
+    assert shares and sum(shares.values()) == pytest.approx(1.0)
+    if not ft.degraded:
+        assert ft.events > 0
+        assert shares.get("gemm", 0) > 0.3
+    snap = prof.snapshot()
+    assert snap["windows"]["k"]["mode"] == "trace"
+    assert snap["version"] == PROFILE_SCHEMA_VERSION
+
+
+def test_family_times_merge():
+    a = FamilyTimes(key="k", ms={"gemm": 1.0}, events=2, wall_ms=2.0)
+    b = FamilyTimes(key="k", ms={"gemm": 1.0, "arith": 2.0},
+                    unattributed_ms=0.5, events=3, wall_ms=3.0,
+                    degraded=True)
+    a.merge(b)
+    assert a.ms == {"gemm": 2.0, "arith": 2.0}
+    assert a.events == 5 and a.wall_ms == 5.0
+    assert a.unattributed_ms == 0.5 and a.degraded
+    d = a.as_dict()
+    assert d["key"] == "k" and d["shares"]["arith"] == pytest.approx(0.5)

@@ -23,7 +23,9 @@ import pytest
 from repro.core.config import AttnConfig, ModelConfig, SSMConfig
 from repro.models.lm import init_lm_params
 from repro.serving.engine import Request, ServingEngine
-from repro.serving.telemetry import (Telemetry, operator_costs, read_trace)
+from repro.serving.telemetry import (TRACE_SCHEMA_VERSION, Telemetry,
+                                     TelemetryTable, operator_costs,
+                                     read_trace)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -68,7 +70,7 @@ def test_compile_samples_segregated_from_steady():
     # steady estimate sees ONLY the steady samples
     assert tel.estimate("decode", 128) == pytest.approx(
         0.25 * 3.0 + 0.75 * 1.0)
-    snap = tel.latency_snapshot()["decode@128"]
+    snap = tel.latency_snapshot()["table"]["decode@128"]
     assert snap["compile"]["count"] == 1
     assert snap["compile"]["max_ms"] == 500.0
     assert snap["steady"]["count"] == 2
@@ -111,7 +113,11 @@ def test_fresh_bucket_burst_tagged_compile_not_steady():
     (req,) = eng.run(max_iters=500)
     assert req.status == "ok" and len(req.out) == 160
     assert {128, 256} <= eng.buckets_used
-    snap = eng.telemetry.latency_snapshot()
+    full = eng.telemetry.latency_snapshot()
+    # the snapshot names its schema and arch explicitly (ISSUE 8)
+    assert full["version"] == TRACE_SCHEMA_VERSION
+    assert full["arch"] == "hyb"
+    snap = full["table"]
     total_steady = 0
     for bucket in (128, 256):
         rec = snap[f"decode@{bucket}"]
@@ -160,7 +166,7 @@ def test_ragged_final_chunk_divides_by_valid_tokens():
     # chunk 0 (8 valid) is the fresh-compile sample; chunk 1 (4 valid) is
     # the only steady sample: 1ms / 4 tokens
     assert eng.stats["ewma_prefill_tok_ms"] == pytest.approx(0.25)
-    snap = eng.telemetry.latency_snapshot()
+    snap = eng.telemetry.latency_snapshot()["table"]
     # exactly one concrete prefill bucket key (max_seq=64 caps the ladder)
     (key,) = [k for k in snap
               if k.startswith("prefill@") and not k.endswith("@*")]
@@ -202,6 +208,9 @@ def test_trace_jsonl_roundtrip(tmp_path):
     spans = read_trace(path)
     assert sorted(s["rid"] for s in spans) == [0, 1, 2]
     for s in spans:
+        # every line names its schema + arch (stale traces are rejectable)
+        assert s["version"] == TRACE_SCHEMA_VERSION
+        assert s["arch"] == "hyb"
         assert s["status"] == "ok"
         assert s["tokens_out"] == 5
         kinds = [e["kind"] for e in s["events"]]
@@ -245,3 +254,126 @@ def test_span_records_preemption_and_terminal_error():
     (span,) = eng2.telemetry.finished_spans
     assert span["status"] == "timed_out"
     assert "deadline" in span["error"]
+
+
+def test_read_trace_rejects_stale_schema_version(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    path.write_text(json.dumps({"version": 1, "rid": 0, "events": []})
+                    + "\n")
+    with pytest.raises(ValueError, match="schema version 1"):
+        read_trace(str(path))
+
+
+# ----------------------------------------------- arch keying + warm start
+
+def test_latency_table_never_mixes_archs():
+    """Two engines (archs) over ONE shared table: rungs recorded under
+    one arch are invisible to the other — the cross-arch fallback bug
+    the per-arch key exists to fix."""
+    table = TelemetryTable()
+    a = Telemetry(clock=lambda: 0.0, trace_path="", arch="ssm-a",
+                  table=table)
+    b = Telemetry(clock=lambda: 0.0, trace_path="", arch="hyb-b",
+                  table=table)
+    a.record_latency("decode", 128, 2.0)
+    a.record_latency("decode", 512, 8.0)
+    assert a.estimate("decode", 128) == pytest.approx(2.0)
+    # arch b must not fall back into arch a's rungs OR its global record
+    assert b.estimate("decode", 128) is None
+    assert b.estimate("decode", 4096) is None
+    b.record_latency("decode", 128, 5.0)
+    assert b.estimate("decode", 128) == pytest.approx(5.0)
+    assert a.estimate("decode", 128) == pytest.approx(2.0)
+    assert table.archs() == ["hyb-b", "ssm-a"]
+    # each front snapshots only its own slice
+    assert set(a.latency_snapshot()["table"]) == {"decode@128", "decode@512",
+                                                  "decode@*"}
+    assert a.latency_snapshot()["arch"] == "ssm-a"
+
+
+def test_warmstart_roundtrip_table(tmp_path):
+    path = str(tmp_path / "warm.json")
+    tel = Telemetry(clock=lambda: 0.0, trace_path="", arch="hyb")
+    tel.record_latency("decode", 128, 500.0, compiled=True)
+    tel.record_latency("decode", 128, 2.0)
+    tel.record_latency("prefill", 128, 0.5)
+    assert tel.save_warmstart(path) == path
+    warm = Telemetry(clock=lambda: 0.0, trace_path="", arch="hyb",
+                     warmstart_path=path)
+    assert warm.warmstart_loaded
+    # warm estimates are the persisted STEADY values — the 500ms compile
+    # spike rides along in the compile record but never feeds estimates
+    assert warm.estimate("decode", 128) == pytest.approx(2.0)
+    assert warm.estimate("prefill", 128) == pytest.approx(0.5)
+    rec = warm.latency_snapshot()["table"]["decode@128"]
+    assert rec["compile"]["count"] == 1 and rec["compile"]["max_ms"] == 500.0
+
+
+def test_warmstart_rejects_corrupt_and_stale_blobs(tmp_path, caplog):
+    import logging
+    garbage = tmp_path / "garbage.json"
+    garbage.write_text("{not json")
+    with caplog.at_level(logging.WARNING, "repro.serving.telemetry"):
+        cold = Telemetry(clock=lambda: 0.0, trace_path="",
+                         warmstart_path=str(garbage))
+    assert not cold.warmstart_loaded
+    assert cold.estimate("decode", 128) is None
+    assert any("warm-start rejected" in r.message for r in caplog.records)
+    caplog.clear()
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps({"version": 99, "archs": {}}))
+    with caplog.at_level(logging.WARNING, "repro.serving.telemetry"):
+        cold = Telemetry(clock=lambda: 0.0, trace_path="",
+                         warmstart_path=str(stale))
+    assert not cold.warmstart_loaded
+    assert any("version" in r.message for r in caplog.records)
+    # a structurally broken table body is rejected the same way
+    broken = tmp_path / "broken.json"
+    broken.write_text(json.dumps({"version": 1, "archs": {"hyb": 7}}))
+    with pytest.raises(ValueError):
+        TelemetryTable().load(str(broken))
+
+
+def test_warm_started_engine_first_admission_uses_persisted_estimate(
+        tmp_path):
+    """The acceptance path: engine run 1 persists its measured latency
+    model; engine 2 (fresh process stand-in, fake clock, ZERO dispatches)
+    must admission-estimate from the persisted steady records — and
+    reject an infeasible deadline before paying any compile."""
+    path = str(tmp_path / "warm.json")
+    cfg = _cfg()
+    params = init_lm_params(cfg, KEY)
+    eng = ServingEngine(cfg, params, slots=1, max_seq=128, decode_block=4,
+                        chunk_size=16, clock=FakeClock(tick_ms=1.0),
+                        warmstart_path=path)
+    # 3 prefill chunks: the first is the segregated compile sample, the
+    # rest give the persisted prefill record STEADY samples to warm from
+    eng.submit(Request(rid=0, prompt=_prompt(cfg, 40), max_new=24))
+    (req,) = eng.run(max_iters=200)    # run() persists in its finally
+    assert req.status == "ok"
+    import os
+    assert os.path.exists(path)
+
+    # frozen clock: zero elapsed time, so the doomed request below can
+    # only die through the admission ESTIMATE, never by TTL expiry
+    eng2 = ServingEngine(cfg, params, slots=1, max_seq=128, decode_block=4,
+                         chunk_size=16, clock=FakeClock(),
+                         warmstart_path=path)
+    assert eng2.telemetry.warmstart_loaded
+    # first-burst admission estimate exists BEFORE any dispatch, equals
+    # the persisted steady model (not the cold scalar EWMAs, which are 0)
+    assert eng2.stats["ewma_tpot_ms"] == 0.0
+    probe = Request(rid=1, prompt=_prompt(cfg, 16), max_new=24)
+    est = eng2._admission_estimate_ms(probe)
+    assert est is not None and est > 0.0
+    ptok = eng2.telemetry.estimate("prefill", 128)
+    tpot = eng2.telemetry.estimate("decode", 128)
+    assert est == pytest.approx(16 * ptok + 24 * tpot)
+    # an infeasible deadline is rejected at admission, pre-dispatch
+    doomed = Request(rid=2, prompt=_prompt(cfg, 16), max_new=24,
+                     deadline_ms=est / 100.0)
+    eng2.submit(doomed)
+    eng2.run(max_iters=50)
+    assert doomed.status == "cancelled"
+    assert "admission reject" in str(doomed.error)
+    assert eng2.stats["decode_tokens"] == 0    # rejected before any burst
