@@ -409,9 +409,9 @@ def bench_serving_telemetry(gen_len: int) -> dict:
     return {"per_bucket": snap, "operator_shares": shares,
             "profile": eng.profile_snapshot(),
             "stats": {"iters": eng.stats["iters"],
-                      "ewma_tpot_ms": eng.stats["ewma_tpot_ms"],
-                      "ewma_prefill_tok_ms":
-                          eng.stats["ewma_prefill_tok_ms"]}}
+                      "tpot_ms_est": eng.telemetry.estimate("decode", None),
+                      "prefill_tok_ms_est":
+                          eng.telemetry.estimate("prefill", None)}}
 
 
 def _gate_telemetry(telem: dict) -> None:
@@ -419,8 +419,9 @@ def _gate_telemetry(telem: dict) -> None:
     (version + explicit arch), compile samples segregated per rung
     (exactly one first-dispatch each), steady samples present AND
     consistent — the per-rung steady counts must add up to the global
-    aggregate and the scalar steady EWMA must be warm whenever bursts
-    outnumber rungs, so a regression of the ``fresh_compile`` gating
+    aggregate and the table's global steady estimate must be warm
+    whenever bursts outnumber rungs, so a regression of the
+    ``fresh_compile`` gating
     (every sample tagged compile, or none) cannot pass silently — plus
     well-formed operator shares and a bounded coarse-profiler overhead."""
     snap = telem["per_bucket"]
@@ -453,15 +454,15 @@ def _gate_telemetry(telem: dict) -> None:
     bursts = steady_sum + compile_sum
     if bursts > len(decode_keys):
         # more bursts than rungs => steady samples MUST exist and feed
-        # the scalar EWMA the admission fallback path reads
+        # the bucket->global fallback the admission estimator reads
         if agg["steady"]["count"] == 0:
             raise SystemExit(
                 f"{bursts} decode bursts over {len(decode_keys)} rungs "
                 "but zero steady samples: fresh_compile gating regressed")
-        if telem["stats"]["ewma_tpot_ms"] <= 0.0:
+        if not telem["stats"]["tpot_ms_est"]:
             raise SystemExit(
-                "steady decode samples exist but ewma_tpot_ms is cold: "
-                f"{telem['stats']}")
+                "steady decode samples exist but the global decode "
+                f"estimate is cold: {telem['stats']}")
     shares = telem["operator_shares"]["by_class"]
     if "gemm" not in shares or "ssm" not in shares:
         raise SystemExit(
@@ -481,6 +482,187 @@ def _gate_telemetry(telem: dict) -> None:
           f"(aggregate reconciles, {bursts} bursts); operator shares sum "
           f"to {total:.3f}; coarse profiler overhead "
           f"{prof['overhead_ms']:.3f}ms / {decode_wall:.1f}ms decode wall")
+
+
+class _TickClock:
+    """Deterministic engine clock: every read advances a fixed tick, so
+    waits and TTFTs are pure functions of the engine's control flow (no
+    host-load noise in the scheduling gates)."""
+
+    def __init__(self, tick_ms: float = 1.0):
+        self.t = 0.0
+        self.tick_s = tick_ms / 1e3
+
+    def __call__(self) -> float:
+        self.t += self.tick_s
+        return self.t
+
+
+def bench_scheduling() -> dict:
+    """Scheduling-policy record for the longitudinal trajectory: the
+    policy-vs-policy per-request bit-identity sweep, a weighted_fair
+    sustained-backlog run scored with the Jain fairness index over
+    weight-normalized per-class service, and a starvation scenario
+    showing weighted_fair aging serves the low class within the bound
+    while strict_tiers fails it with ``StarvationTimeout``."""
+    from repro.serving.engine import Request, ServingEngine
+    from repro.serving.scheduler import (POLICIES, WeightedFairScheduler,
+                                         make_scheduler)
+
+    cfg = bench_configs()[0]
+    params = init_lm_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    weights = {0: 1.0, 1: 4.0}
+
+    def engine(scheduler, preempt_after=4):
+        return ServingEngine(cfg, params, slots=2, max_seq=96,
+                             decode_block=4, chunk_size=16,
+                             preempt_after=preempt_after,
+                             clock=_TickClock(), scheduler=scheduler)
+
+    # --- policy-vs-policy bit-identity: same mixed-class workload under
+    # every policy must decode byte-identical per-request outputs (the
+    # tentpole invariant: policy moves work around, never changes it)
+    plens = [8, 12, 16, 10, 8, 14, 12, 8]
+    prompts = [rng.integers(2, cfg.vocab_size, n).astype(np.int32)
+               for n in plens]
+    outs = {}
+    for policy in POLICIES:
+        eng = engine(make_scheduler(policy, weights, None))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new=8, priority=i % 2))
+        eng.run(max_iters=10_000)
+        assert all(r.status == "ok" for r in eng.finished), \
+            (policy, [r.status for r in eng.finished])
+        outs[policy] = {r.rid: list(r.out) for r in eng.finished}
+    bit_identical = all(outs[p] == outs["fifo"] for p in POLICIES)
+    assert bit_identical, {p: outs[p] for p in POLICIES}
+
+    # --- weighted fairness under sustained backlog: 12 requests per
+    # class, identical shape, 2 slots.  Snapshot per-class service at
+    # half completion (while both classes still have queued work) and
+    # score Jain over service/weight; preemption is disabled so the gate
+    # isolates DRR admission order.  quantum=8 keeps the deficit rounds
+    # finer than one 2-request group (16 tokens each) at toy scale.
+    fair = engine(WeightedFairScheduler(weights=weights, quantum=8),
+                  preempt_after=10**6)
+    per_class = 12
+    for i in range(2 * per_class):
+        prompt = rng.integers(2, cfg.vocab_size, 8).astype(np.int32)
+        fair.submit(Request(rid=100 + i, prompt=prompt, max_new=8,
+                            priority=i % 2))
+    while len(fair.finished) < per_class and fair.step():
+        pass
+    svc_mid = fair.scheduler.class_service()
+    xs = [svc_mid.get(c, 0.0) / w for c, w in weights.items()]
+    jain = (sum(xs) ** 2) / (len(xs) * sum(x * x for x in xs)) \
+        if any(xs) else 0.0
+    fair.run(max_iters=10_000)
+    assert all(r.status == "ok" for r in fair.finished), \
+        [r.status for r in fair.finished]
+    summary = fair.telemetry.class_summary()
+
+    # --- starvation bound: one low-class request under a sustained DRIP
+    # of fresh high-class arrivals (each new arrival outranks it on
+    # credit at weights 1:50, so without aging it would be pushed back
+    # until the drip ends).  weighted_fair aging must serve it within
+    # the configured bound (no StarvationTimeout, TTFT bounded); the
+    # same workload under strict_tiers must fail it with
+    # StarvationTimeout — the bound is enforced either way, never
+    # silently exceeded.
+    starve_ms = 60.0
+    backlog = [rng.integers(2, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(14)]
+    low_prompt = rng.integers(2, cfg.vocab_size, 8).astype(np.int32)
+
+    def starve_run(policy):
+        eng = engine(make_scheduler(policy, {0: 1.0, 1: 50.0}, starve_ms),
+                     preempt_after=10**6)
+        for i in range(4):               # fill both slots + leave queue
+            eng.submit(Request(rid=200 + i, prompt=backlog[i], max_new=8,
+                               priority=1))
+        eng.submit(Request(rid=299, prompt=low_prompt, max_new=8,
+                           priority=0))
+        nxt = 4
+        while eng.step() or eng.queue:
+            if nxt < len(backlog):       # fresh high arrival every step
+                eng.submit(Request(rid=200 + nxt, prompt=backlog[nxt],
+                                   max_new=8, priority=1))
+                nxt += 1
+            if eng.stats["iters"] > 10_000:
+                raise SystemExit(f"{policy} starvation run wedged")
+        low = next(r for r in eng.finished if r.rid == 299)
+        span = eng.telemetry.class_summary().get(0, {})
+        return eng, low, span.get("ttft_p95_ms")
+
+    wf_eng, wf_low, wf_ttft = starve_run("weighted_fair")
+    st_eng, st_low, _ = starve_run("strict_tiers")
+    elapsed_ms = wf_eng._clock() * 1e3
+
+    row = {
+        "policies": list(POLICIES),
+        "bit_identical": bit_identical,
+        "weighted_fair": {
+            "weights": {str(k): v for k, v in weights.items()},
+            "quantum": 8,
+            "jain_fairness": jain,
+            "class_service_mid": {str(k): v for k, v in svc_mid.items()},
+            "per_class": {str(k): v for k, v in summary.items()},
+        },
+        "starvation": {
+            "starve_ms": starve_ms,
+            "elapsed_ms": elapsed_ms,
+            "low_status": wf_low.status,
+            "low_ttft_ms": wf_ttft,
+            "weighted_fair_timeouts": wf_eng.stats["starvation_timeouts"],
+            "strict_tiers_low_status": st_low.status,
+            "strict_tiers_timeouts": st_eng.stats["starvation_timeouts"],
+        },
+    }
+    print(f"scheduling: bit-identical across {'/'.join(POLICIES)}; "
+          f"jain={jain:.3f} mid-backlog (weights 1:4, service "
+          f"{ {k: round(v) for k, v in svc_mid.items()} }); low-class "
+          f"TTFT {wf_ttft if wf_ttft is None else round(wf_ttft, 1)}ms "
+          f"under weighted_fair (bound {starve_ms:.0f}ms, "
+          f"{wf_eng.stats['starvation_timeouts']} timeouts) vs "
+          f"strict_tiers status={st_low.status}")
+    return row
+
+
+def _gate_scheduling(sched: dict) -> None:
+    """Smoke gates on the scheduling record: outputs bit-identical
+    across policies, Jain fairness >= 0.8 for weighted_fair under
+    sustained backlog, and the starvation bound honored — the low class
+    is served (no timeout) with TTFT within a small multiple of the
+    bound under weighted_fair, while strict_tiers enforces the bound by
+    failing the outranked waiter with StarvationTimeout."""
+    if not sched["bit_identical"]:
+        raise SystemExit("per-request outputs differ across policies")
+    jain = sched["weighted_fair"]["jain_fairness"]
+    if jain < 0.8:
+        raise SystemExit(
+            f"weighted_fair Jain fairness {jain:.3f} < 0.8: DRR service "
+            f"does not track the class weights "
+            f"({sched['weighted_fair']['class_service_mid']})")
+    st = sched["starvation"]
+    if st["low_status"] != "ok" or st["weighted_fair_timeouts"]:
+        raise SystemExit(
+            f"weighted_fair starved the low class: {st}")
+    if st["low_ttft_ms"] is None or \
+            st["low_ttft_ms"] > 3.0 * st["starve_ms"]:
+        raise SystemExit(
+            f"low-class TTFT {st['low_ttft_ms']}ms exceeds 3x the "
+            f"{st['starve_ms']:.0f}ms starvation bound: {st}")
+    if st["strict_tiers_low_status"] != "timed_out" \
+            or not st["strict_tiers_timeouts"]:
+        raise SystemExit(
+            "strict_tiers did not enforce starve_ms with "
+            f"StarvationTimeout: {st}")
+    print(f"scheduling smoke OK: bit-identical across "
+          f"{'/'.join(sched['policies'])}, jain {jain:.3f} (>= 0.8), "
+          f"low-class TTFT {st['low_ttft_ms']:.1f}ms within 3x the "
+          f"{st['starve_ms']:.0f}ms bound, strict_tiers timed out the "
+          "outranked waiter")
 
 
 def main() -> None:
@@ -537,15 +719,17 @@ def main() -> None:
 
     telem = bench_serving_telemetry(gen_len)
     measured = bench_measured_shares()
+    sched = bench_scheduling()
     _append_run({"bench": "decode", "smoke": bool(args.smoke),
                  "schema_version": TRACE_SCHEMA_VERSION,
                  "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
                  "results": results, "serving_telemetry": telem,
-                 "measured_shares": measured})
+                 "measured_shares": measured, "scheduling": sched})
 
     if args.smoke:
         _gate_telemetry(telem)
         _gate_measured_shares(measured)
+        _gate_scheduling(sched)
         speedups = [r["speedup"] for r in results.values()]
         gmean = float(np.exp(np.mean(np.log(speedups))))
         worst = min(speedups)

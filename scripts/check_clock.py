@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Injectable-clock lint for the serving subsystem.
+
+Every module under ``src/repro/serving/`` times through the one
+injectable clock the engine threads everywhere (``clock=`` ctor
+parameters defaulting to ``time.monotonic``) — that is what lets the
+fault/scheduling tests and the scheduling smoke drive a deterministic
+fake clock and assert on deadlines, starvation bounds, and TTFTs
+without wall-time noise.  A direct ``time.perf_counter()`` or
+``time.time()`` call inside serving code bypasses the injection and
+silently reintroduces host-load jitter into "deterministic" runs, so
+this lint fails the build on any such call (or on importing those names
+from ``time``).  ``time.monotonic`` is allowed **as a default** for an
+injectable parameter; calling it directly at a timing site is flagged
+too — read ``self._clock`` instead.
+
+  python scripts/check_clock.py         # exits 1 with file:line per violation
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SERVING = ROOT / "src" / "repro" / "serving"
+
+#: time.* attributes that read a wall/CPU clock; calling any of these
+#: directly in serving code bypasses the injectable clock
+BANNED_CALLS = {"perf_counter", "perf_counter_ns", "time", "time_ns",
+                "monotonic", "monotonic_ns", "process_time",
+                "process_time_ns"}
+
+
+def _violations(path: Path) -> list:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    out = []
+    for node in ast.walk(tree):
+        # from time import perf_counter  (any clock name)
+        if isinstance(node, ast.ImportFrom) and node.module == "time":
+            for alias in node.names:
+                if alias.name in BANNED_CALLS:
+                    out.append((node.lineno,
+                                f"from time import {alias.name}"))
+        # time.<clock>() called directly — a bare `time.monotonic`
+        # reference (no call) stays legal as an injectable default
+        if isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "time"
+                    and f.attr in BANNED_CALLS):
+                out.append((node.lineno, f"time.{f.attr}() call"))
+    return out
+
+
+def main() -> int:
+    bad = []
+    for path in sorted(SERVING.glob("*.py")):
+        for lineno, what in _violations(path):
+            bad.append(f"{path.relative_to(ROOT)}:{lineno}: {what} "
+                       "bypasses the injectable clock (accept a clock= "
+                       "parameter defaulting to time.monotonic instead)")
+    if bad:
+        print("check_clock: serving code must time through the "
+              "injectable clock:")
+        for line in bad:
+            print(f"  {line}")
+        return 1
+    files = len(list(SERVING.glob("*.py")))
+    print(f"check_clock OK: {files} serving modules, no direct "
+          "wall-clock calls")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,12 @@
 # hold the plurality at the longest profiled context for the SSM and
 # hybrid profiling configs, and the coarse-mode profiler's bookkeeping
 # overhead on the serving decode path must stay < 3% of decode wall.
+# It also carries the SCHEDULING gates: per-request outputs bit-identical
+# across fifo/strict_tiers/weighted_fair, Jain fairness >= 0.8 for
+# weighted_fair under sustained backlog, and the starvation bound
+# honored.  check_clock.py lints src/repro/serving/ for direct
+# time.perf_counter/time.time calls that would bypass the injectable
+# clock those deterministic gates rely on.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -45,5 +51,8 @@ faults=$?
 python scripts/check_docs.py
 docs=$?
 
-echo "tier1=$tier1 decode_smoke=$smoke prefill_smoke=$prefill attn_smoke=$attn fault_smoke=$faults docs_check=$docs"
-exit $(( tier1 || smoke || prefill || attn || faults || docs ))
+python scripts/check_clock.py
+clock=$?
+
+echo "tier1=$tier1 decode_smoke=$smoke prefill_smoke=$prefill attn_smoke=$attn fault_smoke=$faults docs_check=$docs clock_lint=$clock"
+exit $(( tier1 || smoke || prefill || attn || faults || docs || clock ))

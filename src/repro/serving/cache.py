@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import json
 import zlib
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -128,7 +128,8 @@ def _payload_crc_live(a: np.ndarray, rows) -> int:
     return _payload_crc(np.ascontiguousarray(a[:, :, :rows]))
 
 
-def _finalize_blob(out: Dict[str, np.ndarray]) -> Dict[str, Any]:
+def _finalize_blob(out: Dict[str, np.ndarray],
+                   tags: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     pos = int(out["pos"][0]) if "pos" in out else -1
     live = _live_rows(out, pos)
     schema = _blob_schema(out)
@@ -141,8 +142,25 @@ def _finalize_blob(out: Dict[str, np.ndarray]) -> Dict[str, Any]:
     }
     if live:
         meta["live"] = live
+    if tags:
+        meta["tags"] = dict(tags)
     blob[BLOB_META_KEY] = json.dumps(meta)
     return blob
+
+
+def blob_tags(blob: Dict[str, Any]) -> Dict[str, Any]:
+    """The caller-supplied identity/class tags a blob was offloaded with
+    (``{"rid": ..., "priority": ...}`` from the engine), or {} for legacy
+    blobs.  Unreadable meta raises the same CacheCorruption restore
+    would."""
+    meta_raw = blob.get(BLOB_META_KEY)
+    if meta_raw is None:
+        return {}
+    try:
+        return dict(json.loads(meta_raw).get("tags") or {})
+    except (ValueError, AttributeError, TypeError) as e:
+        raise CacheCorruption(
+            f"unreadable blob __meta__ record: {e}") from None
 
 
 def _blob_nbytes(blob: Dict[str, Any]) -> int:
@@ -157,28 +175,36 @@ def _count_bytes(metrics, name: str, nbytes: int) -> None:
         metrics.counter(name, "host<->device cache traffic").inc(nbytes)
 
 
-def offload_slot(cache: Any, b: int, metrics=None) -> Dict[str, Any]:
+def offload_slot(cache: Any, b: int, metrics=None,
+                 tags: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """Host-offload one slot (preempted request / periodic checkpoint) as
     numpy arrays, plus a ``__meta__`` integrity record (per-key crc32 +
-    schema fingerprint) that :func:`restore_slot` validates."""
+    schema fingerprint) that :func:`restore_slot` validates.  ``tags``
+    (JSON-able, e.g. ``{"rid": ..., "priority": ...}``) ride in the meta
+    record so a blob stays attributable to its request and priority
+    class after the engine that wrote it is gone — and so restore can
+    refuse a blob that was offloaded for a different request."""
     one = jax.device_get(extract_slot(cache, b))   # one batched transfer
     out: Dict[str, Any] = {}
     for path, leaf in jax.tree_util.tree_leaves_with_path(one):
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
         out[key] = np.asarray(leaf)
-    blob = _finalize_blob(out)
+    blob = _finalize_blob(out, tags=tags)
     _count_bytes(metrics, "repro_offload_bytes_total", _blob_nbytes(blob))
     return blob
 
 
-def offload_slots(cache: Any, bs, metrics=None) -> Dict[int, Dict[str, Any]]:
+def offload_slots(cache: Any, bs, metrics=None,
+                  tags: Optional[Dict[int, Dict[str, Any]]] = None
+                  ) -> Dict[int, Dict[str, Any]]:
     """Host-offload SEVERAL slots at once (the periodic checkpoint path):
     one ``device_get`` of the whole cache, then per-slot numpy slicing on
     the host — per-leaf dispatch/transfer overhead is paid once for the
     batch instead of once per slot.  Each returned blob is bit-identical
     to an :func:`offload_slot` call for the same slot (same keys, same
-    ``__meta__`` record), so restore/validate treat them identically."""
+    ``__meta__`` record), so restore/validate treat them identically.
+    ``tags`` maps slot index -> that slot's tag dict."""
     host = jax.device_get(cache)
     leaves = jax.tree_util.tree_leaves_with_path(host)
     keyed = []
@@ -196,7 +222,7 @@ def offload_slots(cache: Any, bs, metrics=None) -> Dict[int, Dict[str, Any]]:
                 out[key] = arr
             else:                                # [n_rep, B, ...]
                 out[key] = arr[:, b:b + 1].copy()
-        blobs[b] = _finalize_blob(out)
+        blobs[b] = _finalize_blob(out, tags=(tags or {}).get(b))
         _count_bytes(metrics, "repro_offload_bytes_total",
                      _blob_nbytes(blobs[b]))
     return blobs
@@ -250,11 +276,22 @@ def validate_blob(blob: Dict[str, Any], template_keys,
 
 
 def restore_slot(cache: Any, blob: Dict[str, Any], b: int,
-                 rid=None, metrics=None) -> Any:
+                 rid=None, metrics=None,
+                 expect_tags: Optional[Dict[str, Any]] = None) -> Any:
     """Re-admit a previously offloaded slot.  The blob is validated first
     (:func:`validate_blob`): a malformed or bit-flipped blob raises
     :class:`CacheCorruption` describing exactly what is wrong instead of
-    a bare ``KeyError`` / silent garbage scatter."""
+    a bare ``KeyError`` / silent garbage scatter.  ``expect_tags`` pins
+    identity: every given key must match the blob's recorded tag (legacy
+    tag-less blobs pass) — restoring request A's slot from request B's
+    blob is corruption even when every checksum is intact."""
+    if expect_tags:
+        tags = blob_tags(blob)
+        for k, v in expect_tags.items():
+            if k in tags and tags[k] != v:
+                raise CacheCorruption(
+                    f"blob identity tag {k!r} mismatch: blob carries "
+                    f"{tags[k]!r}, restore expects {v!r}", rid=rid)
     one = extract_slot(cache, b)   # template structure
     leaves = jax.tree_util.tree_leaves_with_path(one)
     keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))

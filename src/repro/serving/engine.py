@@ -23,12 +23,19 @@ runs exactly ONE prefill chunk interleaved with the decode burst — a
 57K-token prompt can no longer stall the decoding slots behind a
 monolithic O(L) prefill.  Rolling-window layers prefill into their
 ring-buffer caches chunk-by-chunk (modular scatter + ring-unrolling
-mask); there is no separate one-shot admission pipeline anymore.  When
-the queue is starved of slots, the engine preempts the live slot with
-the most deadline *slack* (infinite for deadline-less requests, which
-fall back to max-remaining-decode) — host offload via
-:mod:`repro.serving.cache`, the ring cursor travelling inside the
-offloaded ``pos`` — and restores it once a slot frees up.
+mask); there is no separate one-shot admission pipeline anymore.
+
+Scheduling DECISIONS — admission order, preemption urgency and victim
+choice, deadline/starvation expiry, prefill interleave shares — are
+delegated to a pluggable policy (:mod:`repro.serving.scheduler`:
+``fifo`` / ``strict_tiers`` / ``weighted_fair`` over
+``Request.priority`` classes, selected via ``REPRO_SCHED_POLICY``).
+The engine keeps the MECHANISM: when the queue is starved of slots and
+the policy names a victim, that slot is host-offloaded via
+:mod:`repro.serving.cache` (the ring cursor travelling inside the
+offloaded ``pos``, request identity and priority class riding in the
+blob meta tags) and restored bit-exactly once a slot frees up.
+Policies reorder work; they never change any request's decoded bytes.
 
 Fault tolerance (:mod:`repro.serving.faults` is the taxonomy): every
 request ends in a structured terminal state (``ok`` / ``failed`` /
@@ -66,10 +73,12 @@ from repro.serving.cache import offload_slot, offload_slots, restore_slot
 from repro.serving.fault_inject import FaultPlan, poison_slot
 from repro.serving.faults import (CacheCorruption, DeadlineExceeded,
                                   DivergenceDetected, RequestError,
-                                  SlotStalled)
+                                  SlotStalled, StarvationTimeout)
 from repro.serving.metrics import MetricsRegistry
 from repro.serving.prefill import ChunkedPrefill, supports_chunked_prefill
 from repro.serving.profiler import Profiler
+from repro.serving.scheduler import (Scheduler, VictimCandidate,
+                                     make_scheduler)
 from repro.serving.telemetry import Telemetry
 
 
@@ -159,6 +168,7 @@ class Request:
     prompt: np.ndarray            # [S] int32
     max_new: int
     deadline_ms: Optional[float] = None   # TTL from submit; None = no SLO
+    priority: int = 0             # scheduling class; higher = more important
     out: List[int] = field(default_factory=list)
     done: bool = False
     status: str = "pending"       # terminal: ok/failed/cancelled/timed_out
@@ -223,11 +233,21 @@ class ServingEngine:
     and FLOPs/IO that grow with the true context.
 
     When queued prompts are starved (no slot has freed for
-    ``preempt_after`` iterations and no prefill is in flight), the live
-    slot with the most deadline slack — estimated finish margin under the
-    EWMA per-token latency; deadline-less slots rank as infinite slack
-    and tie-break on max remaining decode work — is offloaded to host
-    memory and requeued; it is restored bit-exactly once a slot frees.
+    ``preempt_after`` iterations and no prefill is in flight — or
+    immediately, when the policy reports a higher class waiting), the
+    scheduler picks a victim from slack-costed candidates (estimated
+    finish margin under the per-(phase, bucket) latency model;
+    deadline-less slots rank as infinite slack): the default fifo rule
+    evicts the most-slack slot tie-broken on max remaining decode work,
+    strict tiers the lowest class, weighted fairness the class furthest
+    over its share.  The victim is offloaded to host memory and
+    requeued; it is restored bit-exactly once a slot frees.
+
+    Scheduling policy (:mod:`repro.serving.scheduler`) is injected via
+    ``scheduler=`` or built from ``sched_policy`` / ``sched_weights`` /
+    ``starve_ms`` (environment: ``REPRO_SCHED_POLICY``,
+    ``REPRO_SCHED_WEIGHTS``).  ``Request.priority`` is the class; the
+    fifo default reproduces the engine's historical behaviour exactly.
 
     Failure handling (every knob below; taxonomy in
     :mod:`repro.serving.faults`):
@@ -245,8 +265,8 @@ class ServingEngine:
       reclaimed; admission rejects (``cancelled``) requests whose
       estimated latency under the per-(phase, KV-bucket) latency model
       (:attr:`telemetry`, steady-state samples only — first-dispatch
-      compile spikes are segregated; falls back to the global
-      steady-state EWMAs in ``stats``) exceeds the budget.
+      compile spikes are segregated; ``estimate()``'s bucket-to-global
+      fallback is the only fallback) exceeds the budget.
     * ``telemetry`` / ``trace_path`` — the structured metrics + tracing
       layer (:mod:`repro.serving.telemetry`): per-(phase, bucket)
       latency records and per-request span traces, JSONL-exported when
@@ -278,7 +298,11 @@ class ServingEngine:
                  trace_path: Optional[str] = None,
                  warmstart_path: Optional[str] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 profiler: Optional[Profiler] = None):
+                 profiler: Optional[Profiler] = None,
+                 scheduler: Optional[Scheduler] = None,
+                 sched_policy: Optional[str] = None,
+                 sched_weights: Optional[Dict[int, float]] = None,
+                 starve_ms: Optional[float] = None):
         if not supports_chunked_prefill(cfg):
             raise ValueError(
                 f"{cfg.name}: no autoregressive serving path (encoder / "
@@ -304,6 +328,13 @@ class ServingEngine:
         self.sentinel = bool(sentinel)
         self.faults = fault_plan if fault_plan is not None \
             else FaultPlan.from_env()
+        # ALL scheduling DECISIONS — admission order, preemption victims,
+        # deadline/starvation expiry, prefill interleave shares — live in
+        # the policy object; the engine below is pure mechanism (dispatch,
+        # scatter, offload/restore, terminal-state bookkeeping).  Policy
+        # may reorder work but never changes any request's decoded bytes.
+        self.scheduler = scheduler if scheduler is not None else \
+            make_scheduler(sched_policy, sched_weights, starve_ms)
         self._clock = clock or time.monotonic
         # ALL engine timing — deadlines, dispatch latency, checkpoint cost
         # — reads this one clock, so fake-clock tests see consistent EWMAs.
@@ -332,6 +363,10 @@ class ServingEngine:
         self._pending: List[Tuple[int, Request]] = []
         self._starved = 0
         self._no_progress = 0
+        # fractional-interleave accumulator: policies may grant the
+        # in-flight prefill group < 1.0 chunk per iteration next to
+        # higher-priority decode slots; credit accrues until a chunk runs
+        self._prefill_credit = 0.0
         self.live: List[Optional[Request]] = [None] * slots
         self.tokens = np.zeros((slots, 1), np.int32)
         self.pos = np.zeros((slots,), np.int64)
@@ -343,7 +378,7 @@ class ServingEngine:
                       "checkpoints": 0, "ckpt_ms": 0.0, "divergences": 0,
                       "replays": 0, "failures": 0, "timeouts": 0,
                       "cancelled": 0, "watchdog_trips": 0,
-                      "ewma_tpot_ms": 0.0, "ewma_prefill_tok_ms": 0.0}
+                      "starvation_timeouts": 0}
         # distinct KV buckets the decode loop has run in (bounded by the
         # bucket ladder — observability for the compile-count discipline)
         self.buckets_used: set = set()
@@ -395,6 +430,15 @@ class ServingEngine:
             "repro_decode_burst_ms", "decode burst wall time (ms)")
         self._m_prefill_ms = m.histogram(
             "repro_prefill_chunk_ms", "prefill chunk wall time (ms)")
+        self._m_ttft = m.histogram(
+            "repro_ttft_ms",
+            "time to first token (ms), labelled by priority class")
+        self._m_class_tokens = m.counter(
+            "repro_class_tokens_total",
+            "tokens served per priority class and phase")
+        self._m_starved = m.counter(
+            "repro_starvation_timeouts_total",
+            "queued requests failed by the scheduler's starvation bound")
 
     def submit(self, req: Request) -> None:
         # validate here, before admission can pop the request and reserve
@@ -423,6 +467,7 @@ class ServingEngine:
         self.telemetry.begin_span(req.rid, prompt_len=len(req.prompt),
                                   max_new=req.max_new,
                                   deadline_ms=req.deadline_ms,
+                                  priority=req.priority,
                                   t=req.submit_t)
         self.queue.append(req)
         self._m_submitted.inc()
@@ -446,12 +491,13 @@ class ServingEngine:
         self._m_finished.labels(status=status).inc()
 
     def _expired(self, req: Request, now: float) -> bool:
-        return (req.deadline_ms is not None
-                and (now - req.submit_t) * 1e3 > req.deadline_ms)
+        return self.scheduler.expired(req, now)
 
     def _expire_deadlines(self) -> None:
         """Cancel queued / mid-prefill / mid-decode requests whose TTL has
-        run out; their slots and group rows are reclaimed immediately."""
+        run out (the scheduler owns the expiry decision; reclaiming slots
+        and group rows is mechanism and happens here), then fail queued
+        requests the policy's starvation bound has given up on."""
         now = self._clock()
         for req in [r for r in self.queue if self._expired(r, now)]:
             self.queue.remove(req)
@@ -471,27 +517,32 @@ class ServingEngine:
                     "deadline expired mid-decode after "
                     f"{len(req.out)} tokens ({req.deadline_ms:.1f}ms)",
                     rid=req.rid))
+        for req in self.scheduler.starved_out(self.queue, self.live, now):
+            self.queue.remove(req)
+            wait_ms = (now - req.submit_t) * 1e3
+            self._fail(req, "timed_out", StarvationTimeout(
+                f"class-{req.priority} request starved for {wait_ms:.1f}ms "
+                f"(> {self.scheduler.starve_ms:.1f}ms bound) behind "
+                "higher-priority work", rid=req.rid))
+            self.stats["starvation_timeouts"] += 1
+            self._m_starved.inc()
 
     def _admission_estimate_ms(self, req: Request) -> Optional[float]:
         """Latency estimate from the per-(phase, bucket) latency model:
         prefill cost at the rung covering the prompt, decode cost at the
         rung the request will finish under (conservative — the deepest
-        bucket it reaches).  Each phase falls back to the phase-global
-        steady-state record, then to the scalar ``stats`` EWMAs (which
-        only ever see steady-state samples); None until anything has
-        been measured."""
+        bucket it reaches).  ``estimate()`` itself falls back from the
+        bucket to the phase-global steady record (never across archs,
+        never to compile samples) — that is the ONLY fallback; None until
+        either phase has a steady-state measurement."""
         plen, mnew = len(req.prompt), req.max_new
         ptok = self.telemetry.estimate(
             "prefill", clamped_bucket(plen, self.kv_extent))
-        if ptok is None:
-            ptok = self.stats["ewma_prefill_tok_ms"]
         tpot = self.telemetry.estimate(
             "decode", clamped_bucket(plen + mnew, self.kv_extent))
-        if tpot is None:
-            tpot = self.stats["ewma_tpot_ms"]
-        if tpot <= 0.0 and ptok <= 0.0:
+        if ptok is None and tpot is None:
             return None
-        return plen * ptok + mnew * tpot
+        return plen * (ptok or 0.0) + mnew * (tpot or 0.0)
 
     # ----------------------------------------------------------- admission
     def _restore(self, b: int, req: Request) -> bool:
@@ -500,7 +551,8 @@ class ServingEngine:
         engine; returns False and leaves the slot free."""
         try:
             self.cache = restore_slot(self.cache, req.blob, b, rid=req.rid,
-                                      metrics=self.metrics)
+                                      metrics=self.metrics,
+                                      expect_tags={"rid": req.rid})
         except CacheCorruption as e:
             self._fail(req, "failed", e)
             return False
@@ -529,14 +581,20 @@ class ServingEngine:
         reserved = {b for b, r in self._pending if not r.done}
         free = [b for b in range(self.slots)
                 if self.live[b] is None and b not in reserved]
-        # fill free slots from the queue in order: preempted requests are
-        # restored in place (their cache is already prefilled+decoded),
-        # fresh prompts accumulate into one mixed-length prefill group
+        # fill free slots from the queue in SCHEDULER order (fifo = submit
+        # order, so the walk below reproduces the historical head-of-queue
+        # loop exactly): preempted requests are restored in place (their
+        # cache is already prefilled+decoded), fresh prompts accumulate
+        # into one mixed-length prefill group.  A fresh prompt that can't
+        # start (group already in flight) ends the walk — later requests
+        # must not jump a reserved slot the policy ordered ahead of them.
         fresh: List[Request] = []
-        while free and self.queue:
-            req = self.queue[0]
+        order = self.scheduler.admission_order(self.queue, self._clock())
+        for req in order:
+            if not free:
+                break
             if req.blob is not None:
-                self.queue.pop(0)
+                self.queue.remove(req)
                 b = free.pop(0)
                 if self._restore(b, req):
                     self._progress = True
@@ -548,24 +606,42 @@ class ServingEngine:
                     left = (req.deadline_ms
                             - (self._clock() - req.submit_t) * 1e3)
                     if est is not None and est > left:
-                        self.queue.pop(0)
+                        self.queue.remove(req)
                         self._fail(req, "cancelled", DeadlineExceeded(
                             f"admission reject: estimated {est:.1f}ms "
                             f"exceeds remaining {left:.1f}ms budget",
                             rid=req.rid))
                         continue
-                self.queue.pop(0)
+                self.queue.remove(req)
                 fresh.append(req)
                 self._pending.append((free.pop(0), req))
             else:  # a group is already in flight; keep the slot reserved
                 break
         if fresh:
             ch.start([r.prompt for r in fresh],
-                     batch=self.slots if len(fresh) > 1 else 1)
+                     batch=self.slots if len(fresh) > 1 else 1,
+                     priorities=[r.priority for r in fresh])
             self._m_admitted.inc(len(fresh))
             self._m_queue.set(len(self.queue))
         stalled = self.faults.active and self.faults.stalled(it)
-        if ch.active and not stalled:
+        run_chunk = ch.active and not stalled
+        if run_chunk:
+            # the policy may grant a low-priority group a fractional
+            # iteration share next to higher-priority decode slots;
+            # credit accrues until a whole chunk is due.  With no live
+            # decode slot there is nothing to yield to: always run.
+            live_cls = [r.priority for r in self.live if r is not None]
+            share = 1.0 if not live_cls else min(1.0, max(
+                0.0, self.scheduler.interleave_share(
+                    [r.priority for _, r in self._pending if not r.done],
+                    live_cls)))
+            self._prefill_credit += share
+            if self._prefill_credit >= 1.0:
+                self._prefill_credit -= 1.0
+            else:
+                run_chunk = False
+                self._starved = 0    # group in flight: queue isn't starved
+        if run_chunk:
             t0 = self._clock()
             emitted, done, diverged = ch.step()
             dt_ms = (self._clock() - t0) * 1e3
@@ -583,19 +659,24 @@ class ServingEngine:
                 self.telemetry.record_latency(
                     "prefill", info["bucket"], tok_ms,
                     compiled=info["fresh_compile"])
-                if not info["fresh_compile"]:
-                    self._ewma("ewma_prefill_tok_ms", tok_ms)
-                    if tok_ms > 0:
-                        self._m_tps.labels(phase="prefill").set(1e3 / tok_ms)
+                if not info["fresh_compile"] and tok_ms > 0:
+                    self._m_tps.labels(phase="prefill").set(1e3 / tok_ms)
                 self._m_tokens.labels(phase="prefill").inc(
                     info["valid_tokens"])
             self._m_prefill_ms.observe(dt_ms)
             self.profiler.observe("prefill", dt_ms)
             for row, (b, req) in enumerate(self._pending):
                 if not req.done and info["valid_per_row"][row]:
+                    tokens = int(info["valid_per_row"][row])
                     self.telemetry.event(
                         req.rid, "prefill", bucket=info["bucket"],
-                        tokens=int(info["valid_per_row"][row]))
+                        tokens=tokens)
+                    # DRR debit: prefill work counts against the class's
+                    # weighted share exactly like decode tokens do
+                    self.scheduler.note_service(req.priority, tokens)
+                    self._m_class_tokens.labels(
+                        priority=str(req.priority), phase="prefill").inc(
+                            tokens)
             for row in diverged:
                 b, req = self._pending[row]
                 if not req.done:
@@ -615,6 +696,10 @@ class ServingEngine:
                     self.tokens[b, 0] = tok
                     self.pos[b] = plen
                     self.live[b] = req
+                    ttft = self.telemetry.first_token(req.rid)
+                    if ttft is not None:
+                        self._m_ttft.labels(
+                            priority=str(req.priority)).observe(ttft)
                 # batch rows past the real group are inert (dst stays -1)
                 full = np.full((ch.group_cache["pos"].shape[0],), -1,
                                np.int32)
@@ -625,26 +710,30 @@ class ServingEngine:
                 ch.finish()
                 self._pending = []
             self._starved = 0
-        elif self.queue and not free and not stalled:
-            # queue starved: no slot freed and nothing is prefilling
+        elif self.queue and not free and not ch.active and not stalled:
+            # queue starved: no slot freed and nothing is prefilling.
+            # The policy can demand immediate preemption (strict tiers:
+            # a higher class is waiting) instead of sitting out the
+            # preempt_after starvation window.
             self._starved += 1
-            if self._starved >= self.preempt_after:
+            if (self._starved >= self.preempt_after
+                    or self.scheduler.urgent_preempt(self.queue, self.live)):
                 self._preempt()
-        elif not stalled:
+        elif not stalled and not ch.active:
             self._starved = 0
 
     def _preempt(self) -> None:
-        """Offload the live slot with the most deadline slack (estimated
-        finish margin under the per-(phase, bucket) latency model: each
-        slot's remaining decode is costed at the rung it will finish
-        under, falling back to the global steady-state EWMA) so a starved
-        queued prompt can take its slot next iteration.  Deadline-less
-        slots rank as infinite slack and tie-break on max remaining
-        decode work — the pre-deadline policy, so a deadline-free
-        workload behaves exactly as before."""
+        """Offload one live slot so a starved queued prompt can take it
+        next iteration.  The engine's part is MECHANISM: cost every live
+        slot's deadline slack under the per-(phase, bucket) latency model
+        (each slot's remaining decode costed at the rung it will finish
+        under; deadline-less slots rank as infinite slack) and offload
+        whichever slot the scheduler names.  Victim CHOICE is policy:
+        fifo keeps the historical most-slack / most-remaining rule,
+        strict tiers evict the lowest class, weighted fairness evicts the
+        class furthest over its share."""
         now = self._clock()
-        tpot_global = max(self.stats["ewma_tpot_ms"], 0.0)
-        best = None
+        candidates: List[VictimCandidate] = []
         for b, req in enumerate(self.live):
             if req is None:
                 continue
@@ -653,20 +742,19 @@ class ServingEngine:
                 slack = float("inf")
             else:
                 tpot = self.telemetry.estimate("decode", clamped_bucket(
-                    int(self.pos[b]) + remaining, self.kv_extent))
-                if tpot is None:
-                    tpot = tpot_global
+                    int(self.pos[b]) + remaining, self.kv_extent)) or 0.0
                 slack = (req.deadline_ms - (now - req.submit_t) * 1e3
                          - remaining * tpot)
-            key = (slack, remaining)
-            if best is None or key > best[0]:
-                best = (key, b)
-        if best is None:
+            candidates.append(VictimCandidate(
+                slot=b, priority=req.priority, slack=slack,
+                remaining=remaining))
+        b = self.scheduler.preempt_victim(candidates, self.queue)
+        if b is None:
             return
-        b = best[1]
         req = self.live[b]
         self.cache = dict(self.cache, pos=jnp.asarray(self.pos, jnp.int32))
-        blob = offload_slot(self.cache, b)
+        blob = offload_slot(self.cache, b, tags={
+            "rid": req.rid, "priority": req.priority})
         if self.faults.active:
             blob = self.faults.corrupt_blob(req.rid, blob)
         req.blob = blob
@@ -700,7 +788,9 @@ class ServingEngine:
         # per-leaf dispatch overhead of slot-at-a-time offload dominated
         # the healthy-path checkpoint cost
         blobs = offload_slots(self.cache, [b for b, _ in need],
-                              metrics=self.metrics)
+                              metrics=self.metrics,
+                              tags={b: {"rid": r.rid, "priority": r.priority}
+                                    for b, r in need})
         for b, req in need:
             blob = blobs[b]
             if self.faults.active:
@@ -732,7 +822,8 @@ class ServingEngine:
                 and req.replays < 1):
             try:
                 self.cache = restore_slot(self.cache, req.ckpt_blob, b,
-                                          rid=req.rid, metrics=self.metrics)
+                                          rid=req.rid, metrics=self.metrics,
+                                          expect_tags={"rid": req.rid})
             except CacheCorruption as e:
                 self.live[b] = None
                 self._fail(req, "failed", e)
@@ -780,11 +871,6 @@ class ServingEngine:
             self._fail(req, "failed", SlotStalled(
                 f"no progress for {self.stall_after} iterations at the "
                 "head of the queue", rid=req.rid))
-
-    def _ewma(self, key: str, sample_ms: float, alpha: float = 0.25) -> None:
-        cur = self.stats[key]
-        self.stats[key] = sample_ms if cur <= 0.0 \
-            else alpha * sample_ms + (1.0 - alpha) * cur
 
     def _open_pending(self) -> int:
         return sum(1 for _, r in self._pending if not r.done)
@@ -857,10 +943,8 @@ class ServingEngine:
                                       compiled=fresh_compile)
         self._m_decode_ms.observe(dt_ms)
         self.profiler.observe("decode", dt_ms)
-        if not fresh_compile:
-            self._ewma("ewma_tpot_ms", dt_ms / kblk)
-            if dt_ms > 0:
-                self._m_tps.labels(phase="decode").set(kblk * 1e3 / dt_ms)
+        if not fresh_compile and dt_ms > 0:
+            self._m_tps.labels(phase="decode").set(kblk * 1e3 / dt_ms)
         n_live = 0
         decoded = 0
         for b, req in enumerate(self.live):
@@ -880,6 +964,9 @@ class ServingEngine:
                 self.tokens[b, 0] = int(toks[b, take - 1])
                 self.telemetry.event(req.rid, "decode", bucket=kv_bucket,
                                      tokens=take)
+                self.scheduler.note_service(req.priority, take)
+                self._m_class_tokens.labels(
+                    priority=str(req.priority), phase="decode").inc(take)
             self.pos[b] += take
             if len(req.out) >= req.max_new or self.pos[b] >= self.max_seq - 1:
                 req.done = True

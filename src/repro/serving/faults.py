@@ -18,6 +18,7 @@ State machine (see docs/ARCHITECTURE.md, "Failure handling"):
        |                |---deadline------------------------------> timed_out
        |                `---corrupt restore blob------------------> failed
        |---deadline (queued / can't-meet estimate)--> timed_out / cancelled
+       |---starved out (strict_tiers starve_ms)-----> timed_out
        `---watchdog (no progress) / max_iters-------> failed / cancelled
 
 The engine NEVER raises one of these during :meth:`ServingEngine.run`:
@@ -82,3 +83,13 @@ class SlotStalled(RequestError):
     decoded zero tokens and advanced no prefill chunk while work was
     queued — the stranded request is failed so the host loop can't hang
     forever behind it."""
+
+
+class StarvationTimeout(RequestError):
+    """A queued request waited past the scheduler's starvation bound
+    (``starve_ms``) while outranked by higher-priority work.  Only the
+    ``strict_tiers`` policy gives up this way — strict tiers can starve a
+    low class indefinitely under sustained high-class load, and a
+    structured failure (status ``timed_out``) beats rotting invisibly at
+    the back of the queue.  ``weighted_fair`` honours the same bound by
+    escalating (aging) instead of failing."""

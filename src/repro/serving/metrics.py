@@ -128,6 +128,25 @@ class _HistogramChild(_Child):
         out.append(("+Inf", self.count))
         return out
 
+    def quantile(self, q: float) -> Optional[float]:
+        """Prometheus-style estimated q-quantile (linear interpolation
+        inside the covering bucket; the overflow bucket reports its lower
+        bound — an honest floor, since nothing bounds it above).  None
+        until a sample has been observed."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        if self.count == 0:
+            return None
+        rank = q * self.count
+        run = 0
+        lo = 0.0
+        for b, c in zip(self.bounds, self.counts):
+            if run + c >= rank and c > 0:
+                return lo + (b - lo) * max(rank - run, 0.0) / c
+            run += c
+            lo = b
+        return self.bounds[-1]
+
 
 class _Instrument:
     """A named metric family: the no-label default child plus any
@@ -210,6 +229,9 @@ class Histogram(_Instrument):
 
     def observe(self, value: float) -> None:
         self._default.observe(value)
+
+    def quantile(self, q: float) -> Optional[float]:
+        return self._default.quantile(q)
 
 
 class MetricsRegistry:

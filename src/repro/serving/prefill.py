@@ -261,7 +261,8 @@ class ChunkedPrefill:
         # diverts one sample to the compile record, never poisons steady.)
         self._dispatched: set = set()
         # facts about the most recent step(), for the engine's telemetry:
-        # {"bucket", "valid_tokens", "valid_per_row", "fresh_compile"}
+        # {"bucket", "valid_tokens", "valid_per_row", "class_tokens",
+        #  "fresh_compile"}
         self.last_chunk: Optional[Dict[str, Any]] = None
         # optional shared MetricsRegistry (the engine passes its own)
         self._m_chunks = self._m_quar = self._m_rows = None
@@ -292,11 +293,20 @@ class ChunkedPrefill:
         return self._templates[batch]
 
     def start(self, prompts: List[np.ndarray],
-              batch: Optional[int] = None) -> None:
+              batch: Optional[int] = None,
+              priorities: Optional[Sequence[int]] = None) -> None:
         """Begin a group over mixed-length ``prompts`` (1-D int arrays).
         ``batch`` pads the compiled batch dimension (rows past
         ``len(prompts)`` get zero-length prompts and are inert), bounding
-        XLA compiles to one chunk program per retained batch size."""
+        XLA compiles to one chunk program per retained batch size.
+
+        ``prompts`` arrive in SCHEDULER order — the engine's admission
+        policy decides group membership and row order; this class only
+        executes the group.  ``priorities`` (parallel to ``prompts``;
+        default all class 0) labels each row's priority class so
+        :attr:`last_chunk` can report per-class valid-token counts — the
+        DRR accounting and fairness benches read them without walking
+        engine internals."""
         assert self._group is None, "one prefill group at a time"
         k = len(prompts)
         kb = batch or k
@@ -306,13 +316,17 @@ class ChunkedPrefill:
         if lens.max() > self.max_seq:
             raise ValueError(f"prompt length {int(lens.max())} exceeds "
                              f"max_seq {self.max_seq}")
+        prios = np.zeros((kb,), np.int64)
+        if priorities is not None:
+            assert len(priorities) == k
+            prios[:k] = np.asarray(priorities, np.int64)
         n_chunks = max(1, -(-int(lens.max()) // self.chunk))
         toks = np.zeros((kb, n_chunks * self.chunk), np.int32)
         for i, p in enumerate(prompts):
             toks[i, :len(p)] = np.asarray(p, np.int32)
         self._group = {"tokens": toks, "lens": lens, "n_chunks": n_chunks,
                        "idx": 0, "k": k, "emitted": np.zeros(kb, bool),
-                       "bad": np.zeros(kb, bool),
+                       "bad": np.zeros(kb, bool), "priorities": prios,
                        "cache": self._template(kb)}
 
     def cancel_row(self, row: int) -> None:
@@ -353,9 +367,15 @@ class ChunkedPrefill:
                      if self.kv_buckets and kdispatch.prefill_kv_buckets()
                      else None)
         combo = (g["lens"].shape[0], kv_bucket)
+        class_tokens: Dict[int, int] = {}
+        for r in range(g["k"]):
+            if clens[r]:
+                cls = int(g["priorities"][r])
+                class_tokens[cls] = class_tokens.get(cls, 0) + int(clens[r])
         self.last_chunk = {"bucket": kv_bucket,
                            "valid_tokens": int(clens.sum()),
                            "valid_per_row": np.asarray(clens),
+                           "class_tokens": class_tokens,
                            "fresh_compile": combo not in self._dispatched}
         self._dispatched.add(combo)
         if self._m_chunks is not None:

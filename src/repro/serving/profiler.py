@@ -209,7 +209,10 @@ class Profiler:
             raise ValueError(f"REPRO_PROFILE={mode!r}: expected one of "
                              f"{PROFILE_MODES}")
         self.mode = mode
-        self._clock = clock or time.perf_counter
+        # time.monotonic, like every serving module: the injectable-clock
+        # contract (scripts/check_clock.py) keeps fake-clock tests able to
+        # drive ALL serving time from one base
+        self._clock = clock or time.monotonic
         self._programs: Dict[str, _Program] = {}
         self._merged_map: Dict[str, str] = {}
         self._totals: Dict[str, FamilyTimes] = {}

@@ -318,12 +318,25 @@ class Telemetry:
     # -------------------------------------------------------- span traces
     def begin_span(self, rid: int, *, prompt_len: int, max_new: int,
                    deadline_ms: Optional[float] = None,
-                   t: Optional[float] = None) -> None:
+                   priority: int = 0, t: Optional[float] = None) -> None:
         self._spans[rid] = {
             "version": TRACE_SCHEMA_VERSION, "arch": self.arch,
             "rid": rid, "submit_t": self._clock() if t is None else t,
             "prompt_len": int(prompt_len), "max_new": int(max_new),
-            "deadline_ms": deadline_ms, "status": "pending", "events": []}
+            "deadline_ms": deadline_ms, "priority": int(priority),
+            "status": "pending", "events": []}
+
+    def first_token(self, rid: int) -> Optional[float]:
+        """Mark ``rid``'s first emitted token and return its TTFT in ms
+        (clock now minus span submit time).  Idempotent — a request
+        restored after preemption already has its TTFT and keeps it; a
+        no-op (None) for unknown rids."""
+        span = self._spans.get(rid)
+        if span is None:
+            return None
+        if "ttft_ms" not in span:
+            span["ttft_ms"] = (self._clock() - span["submit_t"]) * 1e3
+        return span["ttft_ms"]
 
     # repeated same-(kind, bucket) events merge into one counting event:
     # spans scale with bucket climbs and phase changes, not token counts
@@ -375,6 +388,32 @@ class Telemetry:
         if self.trace_path:
             with open(self.trace_path, "a") as f:
                 f.write(json.dumps(span) + "\n")
+
+    def class_summary(self) -> Dict[int, Dict[str, Any]]:
+        """Per-priority-class aggregates over the finished spans: request
+        counts by status, tokens out, and TTFT p50/p95 (ms, over spans
+        that emitted a first token).  The scheduling smoke bench reads
+        this for its per-class fairness/starvation record."""
+        by_cls: Dict[int, Dict[str, Any]] = {}
+        for span in self.finished_spans:
+            cls = int(span.get("priority", 0))
+            agg = by_cls.setdefault(cls, {"count": 0, "by_status": {},
+                                          "tokens_out": 0, "_ttft": []})
+            agg["count"] += 1
+            st = span.get("status", "unknown")
+            agg["by_status"][st] = agg["by_status"].get(st, 0) + 1
+            agg["tokens_out"] += int(span.get("tokens_out", 0))
+            if span.get("ttft_ms") is not None:
+                agg["_ttft"].append(float(span["ttft_ms"]))
+        for agg in by_cls.values():
+            ttfts = sorted(agg.pop("_ttft"))
+            if ttfts:
+                agg["ttft_p50_ms"] = ttfts[len(ttfts) // 2]
+                agg["ttft_p95_ms"] = ttfts[
+                    min(len(ttfts) - 1, int(len(ttfts) * 0.95))]
+            else:
+                agg["ttft_p50_ms"] = agg["ttft_p95_ms"] = None
+        return by_cls
 
 
 def operator_costs(compiled) -> Dict[str, Any]:

@@ -356,11 +356,13 @@ def test_deadline_expires_mid_decode():
     assert req.out and len(req.out) < 200     # made progress, then expired
 
 
-def test_deadline_admission_reject_uses_ewma():
+def test_deadline_admission_reject_uses_latency_model():
     cfg, params = _setup("hybrid")
     eng = ServingEngine(cfg, params, slots=1, max_seq=48, decode_block=4,
                         clock=FakeClock())
-    eng.stats["ewma_tpot_ms"] = 50.0          # measured: 50ms / token
+    # measured: 50ms / token (steady decode sample; telemetry is the only
+    # cost model — the legacy scalar EWMA path is gone)
+    eng.telemetry.record_latency("decode", None, 50.0)
     p0, p1 = _prompts(cfg)
     eng.submit(Request(rid=0, prompt=p0, max_new=8, deadline_ms=10.0))
     eng.submit(Request(rid=1, prompt=p1, max_new=8))

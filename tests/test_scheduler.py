@@ -1,0 +1,339 @@
+"""Scheduling policy layer: unit coverage for the pure policy decisions
+in ``src/repro/serving/scheduler.py`` (ordering, DRR credit accounting,
+starvation bounds, victim selection, config parsing) plus engine-level
+invariants — strict-tier preemption restores bit-exactly across KV
+bucket rungs, the weighted_fair aging bound beats sustained high-class
+load, strict_tiers converts unbounded waiting into ``StarvationTimeout``,
+and the tentpole invariant: per-request decoded outputs are
+bit-identical under every policy (policies reorder work, never math).
+The slow sweep runs the bit-identity check across dense/mamba2/hybrid
+x ref/interpret backends."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.faults import StarvationTimeout
+from repro.serving.scheduler import (POLICIES, Scheduler,
+                                     StrictTiersScheduler, VictimCandidate,
+                                     WeightedFairScheduler, make_scheduler,
+                                     parse_weights)
+from tests.test_faults import FakeClock, _prompts, _setup
+
+
+def _req(priority=0, submit_t=0.0, deadline_ms=None, rid=0):
+    return SimpleNamespace(priority=priority, submit_t=submit_t,
+                           deadline_ms=deadline_ms, rid=rid)
+
+
+# ------------------------------------------------------------ config parsing
+
+def test_parse_weights():
+    assert parse_weights(None) == {}
+    assert parse_weights("") == {}
+    assert parse_weights("0:1,1:4") == {0: 1.0, 1: 4.0}
+    assert parse_weights(" 0:1 , 2:16.5 ,") == {0: 1.0, 2: 16.5}
+
+
+@pytest.mark.parametrize("bad", ["1", "a:2", "1:x", "-1:2", "1:0", "1:-3"])
+def test_parse_weights_rejects(bad):
+    with pytest.raises(ValueError, match="malformed"):
+        parse_weights(bad)
+
+
+def test_make_scheduler(monkeypatch):
+    assert make_scheduler().policy == "fifo"
+    assert make_scheduler("weighted_fair", {1: 4.0}).weights == {1: 4.0}
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        make_scheduler("lottery")
+    monkeypatch.setenv("REPRO_SCHED_POLICY", "strict_tiers")
+    monkeypatch.setenv("REPRO_SCHED_WEIGHTS", "0:1,1:8")
+    s = make_scheduler()
+    assert s.policy == "strict_tiers" and s.weights == {0: 1.0, 1: 8.0}
+    # explicit arguments beat the environment
+    assert make_scheduler("fifo", {}).policy == "fifo"
+    monkeypatch.setenv("REPRO_SCHED_POLICY", "casino")
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        make_scheduler()
+
+
+# ------------------------------------------------------------------- fifo
+
+def test_fifo_defaults():
+    s = Scheduler()
+    q = [_req(rid=i, priority=p) for i, p in enumerate((0, 3, 1))]
+    assert s.admission_order(q, now=1.0) == q          # submit order
+    assert s.starved_out(q, [], now=1e9) == []         # never starves
+    assert not s.urgent_preempt(q, [_req()])
+    assert s.interleave_share([0], [3]) == 1.0
+    assert s.expired(_req(submit_t=0.0, deadline_ms=50.0), now=0.06)
+    assert not s.expired(_req(submit_t=0.0, deadline_ms=50.0), now=0.04)
+    assert not s.expired(_req(deadline_ms=None), now=1e9)
+
+
+def test_fifo_victim_most_slack_then_most_remaining():
+    s = Scheduler()
+    cands = [VictimCandidate(slot=0, priority=0, slack=10.0, remaining=64),
+             VictimCandidate(slot=1, priority=0, slack=90.0, remaining=4),
+             VictimCandidate(slot=2, priority=0, slack=90.0, remaining=32)]
+    assert s.preempt_victim(cands, []) == 2            # slack tie -> work
+    inf = VictimCandidate(slot=3, priority=5, slack=float("inf"),
+                          remaining=1)
+    assert s.preempt_victim(cands + [inf], []) == 3    # deadline-less first
+    assert s.preempt_victim([], []) is None
+
+
+def test_class_service_accumulates():
+    s = Scheduler()
+    s.note_service(0, 10)
+    s.note_service(1, 4)
+    s.note_service(0, 6)
+    s.note_service(1, 0)                               # no-op
+    assert s.class_service() == {0: 16.0, 1: 4.0}
+
+
+# ----------------------------------------------------------- strict tiers
+
+def test_strict_tiers_order_stable_within_class():
+    s = StrictTiersScheduler()
+    a, b, c, d = (_req(rid=i, priority=p)
+                  for i, p in enumerate((0, 2, 1, 2)))
+    assert s.admission_order([a, b, c, d], now=0.0) == [b, d, c, a]
+
+
+def test_strict_tiers_urgent_preempt_and_victim():
+    s = StrictTiersScheduler()
+    live = [_req(priority=0), None]
+    assert s.urgent_preempt([_req(priority=1)], live)
+    assert not s.urgent_preempt([_req(priority=0)], live)
+    assert not s.urgent_preempt([], live)
+    cands = [VictimCandidate(slot=0, priority=0, slack=5.0, remaining=8),
+             VictimCandidate(slot=1, priority=2, slack=99.0, remaining=99)]
+    # evicts the LOWEST class even when a higher-class slot has more slack
+    assert s.preempt_victim(cands, [_req(priority=1)]) == 0
+    # never evicts for an equal-or-lower class
+    assert s.preempt_victim(cands, [_req(priority=0)]) is None
+
+
+def test_strict_tiers_starves_only_outranked_waiters():
+    s = StrictTiersScheduler(starve_ms=100.0)
+    low = _req(priority=0, submit_t=0.0)
+    peer = _req(priority=1, submit_t=0.0)
+    high = _req(priority=1, submit_t=0.35)
+    assert s.starved_out([low, high], [], now=0.4) == [low]
+    # the top class itself never times out, however long it waited
+    assert s.starved_out([peer, high], [], now=0.4) == []
+    # live slots count toward the outranking class too
+    assert s.starved_out([low], [_req(priority=1)], now=0.4) == [low]
+    assert StrictTiersScheduler(starve_ms=None).starved_out(
+        [low], [], now=1e9) == []
+
+
+def test_strict_tiers_interleave_yields_for_higher_class_decode():
+    s = StrictTiersScheduler()
+    assert s.interleave_share([0], [1]) == 0.5
+    assert s.interleave_share([1], [0]) == 1.0
+    assert s.interleave_share([1], [1]) == 1.0
+    assert s.interleave_share([], [1]) == 1.0
+
+
+# ---------------------------------------------------------- weighted fair
+
+def test_drr_round_fires_only_on_exhaustion():
+    s = WeightedFairScheduler(weights={0: 1.0, 1: 4.0}, quantum=8)
+    q = [_req(rid=0, priority=0), _req(rid=1, priority=1)]
+    order = s.admission_order(q, now=0.0)
+    # first round banks quantum x weight -> class 1 outranks class 0
+    assert [r.priority for r in order] == [1, 0]
+    assert s._credit == {0: 8.0, 1: 32.0}
+    # no exhaustion -> repeated calls must NOT bank more credit
+    s.admission_order(q, now=0.0)
+    assert s._credit == {0: 8.0, 1: 32.0}
+    # service debits; once ALL queued classes are exhausted a new round
+    # fires on top of the residual deficit (classic DRR)
+    s.note_service(1, 32)
+    s.admission_order(q, now=0.0)
+    assert s._credit == {0: 8.0, 1: 0.0}
+    s.note_service(0, 10)
+    s.admission_order(q, now=0.0)
+    assert s._credit == {0: 6.0, 1: 32.0}
+
+
+def test_drr_sustained_backlog_converges_to_weights():
+    s = WeightedFairScheduler(weights={0: 1.0, 1: 4.0}, quantum=8)
+    q = [_req(rid=0, priority=0), _req(rid=1, priority=1)]
+    for _ in range(400):
+        head = s.admission_order(q, now=0.0)[0]
+        s.note_service(head.priority, 4)       # serve the chosen class
+    svc = s.class_service()
+    assert svc[1] / svc[0] == pytest.approx(4.0, rel=0.15)
+
+
+def test_weighted_fair_aging_jumps_the_order():
+    s = WeightedFairScheduler(weights={0: 1.0, 1: 50.0}, starve_ms=100.0,
+                              quantum=8)
+    old_low = _req(rid=0, priority=0, submit_t=0.0)
+    high = _req(rid=1, priority=1, submit_t=0.04)
+    assert s.admission_order([old_low, high], now=0.05)[0] is high
+    # past the bound the aged request leads regardless of credit
+    assert s.admission_order([old_low, high], now=0.2)[0] is old_low
+    assert s.starved_out([old_low], [], now=1e9) == []  # escalate, not fail
+
+
+def test_weighted_fair_victim_is_most_over_share():
+    s = WeightedFairScheduler(weights={0: 1.0, 1: 4.0}, quantum=8)
+    s._credit = {0: -4.0, 1: -8.0}     # normalized: 0 is 4 over, 1 is 2
+    cands = [VictimCandidate(slot=0, priority=0, slack=0.0, remaining=1),
+             VictimCandidate(slot=1, priority=1, slack=99.0, remaining=99)]
+    assert s.preempt_victim(cands, []) == 0
+    assert s.preempt_victim([], []) is None
+
+
+def test_weighted_fair_interleave_tracks_weight_ratio():
+    s = WeightedFairScheduler(weights={0: 1.0, 1: 4.0})
+    assert s.interleave_share([1], [0]) == 1.0     # 4/5 * 2 clamped
+    assert s.interleave_share([0], [1]) == pytest.approx(0.4)
+    assert s.interleave_share([0], [0, 0, 0]) == 0.5
+    assert s.interleave_share([], [1]) == 1.0
+
+
+# --------------------------------------------------------- engine behaviour
+
+def _engine(arch="dense", **kw):
+    cfg, params = _setup(arch)
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_seq", 48)
+    kw.setdefault("decode_block", 4)
+    kw.setdefault("chunk_size", 8)
+    return cfg, ServingEngine(cfg, params, **kw)
+
+
+def test_engine_default_scheduler_is_fifo():
+    _, eng = _engine()
+    assert eng.scheduler.policy == "fifo"
+
+
+def _policy_outputs(arch, policy, *, lens=(9, 6, 11, 7), max_new=8,
+                    **kw):
+    cfg, eng = _engine(arch,
+                       scheduler=make_scheduler(policy, {0: 1.0, 1: 4.0}),
+                       **kw)
+    for i, p in enumerate(_prompts(cfg, lens=lens)):
+        eng.submit(Request(rid=i, prompt=p, max_new=max_new,
+                           priority=i % 2))
+    eng.run(max_iters=500)
+    assert all(r.status == "ok" for r in eng.finished), \
+        (policy, [(r.rid, r.status) for r in eng.finished])
+    return {r.rid: list(r.out) for r in eng.finished}
+
+
+def test_policy_bit_identity():
+    ref = _policy_outputs("dense", "fifo")
+    for policy in POLICIES[1:]:
+        assert _policy_outputs("dense", policy) == ref, policy
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,backend", [
+    ("dense", "ref"), ("mamba2", "ref"), ("hybrid", "ref"),
+    ("dense", "interpret"), ("mamba2", "interpret"),
+    ("hybrid", "interpret"),
+])
+def test_policy_bit_identity_sweep(arch, backend):
+    with dispatch.use_backend(backend):
+        ref = _policy_outputs(arch, "fifo")
+        for policy in POLICIES[1:]:
+            assert _policy_outputs(arch, policy) == ref, (arch, policy)
+
+
+def test_strict_tier_preemption_restores_bit_exact_across_buckets():
+    """A high-class arrival evicts the low-class slot mid-decode AFTER
+    its KV prefix climbed past the 128 bucket rung; the restored request
+    must finish with the solo run's exact tokens (blob restore rebuilds
+    the ladder state, policy only chose the victim)."""
+    cfg, _ = _engine()
+    rng = np.random.default_rng(11)
+    low_prompt = rng.integers(2, cfg.vocab_size, 120).astype(np.int32)
+    high_prompt = rng.integers(2, cfg.vocab_size, 9).astype(np.int32)
+    kw = dict(slots=1, max_seq=192, chunk_size=32,
+              scheduler=StrictTiersScheduler())
+
+    _, solo = _engine(**kw)
+    solo.submit(Request(rid=0, prompt=low_prompt, max_new=16, priority=0))
+    solo.run(max_iters=500)
+    ref = {r.rid: list(r.out) for r in solo.finished}
+
+    _, eng = _engine(**kw)
+    eng.submit(Request(rid=0, prompt=low_prompt, max_new=16, priority=0))
+    # decode until the low request's KV prefix crosses the 128 rung
+    while not (eng.live[0] is not None and len(eng.live[0].out) >= 10):
+        assert eng.step()
+    assert int(eng.pos[0]) > 128
+    eng.submit(Request(rid=1, prompt=high_prompt, max_new=8, priority=1))
+    eng.run(max_iters=500)
+    done = {r.rid: r for r in eng.finished}
+    assert eng.stats["preemptions"] >= 1
+    # high class finished first (it preempted), both bit-exact
+    assert [r.rid for r in eng.finished][0] == 1
+    assert done[0].status == "ok" and list(done[0].out) == ref[0]
+
+    _, hsolo = _engine(**kw)
+    hsolo.submit(Request(rid=1, prompt=high_prompt, max_new=8, priority=1))
+    hsolo.run(max_iters=500)
+    assert list(done[1].out) == list(hsolo.finished[0].out)
+
+
+def _starve_workload(policy, clock, *, starve_ms, n_high=10):
+    """Sustained high-class load: a couple of high requests plus one
+    low-class request up front, then a drip of FRESH high arrivals while
+    the engine runs — the scenario where credit order alone would push
+    the low request back forever (each new arrival outranks it)."""
+    cfg, eng = _engine(slots=1, clock=clock,
+                       scheduler=make_scheduler(policy, {0: 1.0, 1: 50.0},
+                                                starve_ms))
+    rng = np.random.default_rng(5)
+
+    def high(i):
+        p = rng.integers(2, cfg.vocab_size, 8).astype(np.int32)
+        return Request(rid=i, prompt=p, max_new=8, priority=1)
+
+    eng.submit(high(0))
+    eng.submit(high(1))
+    eng.submit(Request(rid=99, prompt=rng.integers(
+        2, cfg.vocab_size, 8).astype(np.int32), max_new=8, priority=0))
+    nxt, steps = 2, 0
+    while (eng.step() or eng.queue) and steps < 2000:
+        steps += 1
+        if nxt < n_high:                 # one fresh arrival per step:
+            eng.submit(high(nxt))        # arrivals outpace the slot
+            nxt += 1
+    assert nxt == n_high                 # the drip actually all arrived
+    return eng, {r.rid: r for r in eng.finished}
+
+
+def test_weighted_fair_aging_beats_sustained_high_load():
+    """Under a sustained drip of high-class arrivals (weights 1:50 —
+    credit alone would let every fresh arrival outrank the low class
+    forever) the aging bound must get the low request served
+    mid-backlog, with zero starvation timeouts."""
+    eng, done = _starve_workload("weighted_fair", FakeClock(tick_ms=1.0),
+                                 starve_ms=40.0)
+    assert done[99].status == "ok"
+    assert eng.stats["starvation_timeouts"] == 0
+    order = [r.rid for r in eng.finished]
+    # served before the tail of the drip, not dead last
+    assert order.index(99) < len(order) - 3, order
+    ttft = eng.telemetry.class_summary()[0]["ttft_p95_ms"]
+    assert ttft is not None and ttft > 0.0
+
+
+def test_strict_tiers_enforces_starvation_bound():
+    eng, done = _starve_workload("strict_tiers", FakeClock(tick_ms=1.0),
+                                 starve_ms=40.0)
+    assert done[99].status == "timed_out"
+    assert isinstance(done[99].error, StarvationTimeout)
+    assert not done[99].out                          # never served
+    assert eng.stats["starvation_timeouts"] == 1
+    assert all(done[i].status == "ok" for i in range(10))

@@ -127,7 +127,7 @@ def test_fresh_bucket_burst_tagged_compile_not_steady():
     # the phase-global aggregate is exactly the per-bucket records summed
     assert snap["decode@*"]["compile"]["count"] == 2
     assert snap["decode@*"]["steady"]["count"] == total_steady
-    assert eng.stats["ewma_tpot_ms"] > 0.0
+    assert eng.telemetry.estimate("decode", None) > 0.0
 
 
 def test_admission_estimate_ignores_compile_spikes():
@@ -165,7 +165,7 @@ def test_ragged_final_chunk_divides_by_valid_tokens():
     assert req.status == "ok"
     # chunk 0 (8 valid) is the fresh-compile sample; chunk 1 (4 valid) is
     # the only steady sample: 1ms / 4 tokens
-    assert eng.stats["ewma_prefill_tok_ms"] == pytest.approx(0.25)
+    assert eng.telemetry.estimate("prefill", None) == pytest.approx(0.25)
     snap = eng.telemetry.latency_snapshot()["table"]
     # exactly one concrete prefill bucket key (max_seq=64 caps the ladder)
     (key,) = [k for k in snap
@@ -361,8 +361,8 @@ def test_warm_started_engine_first_admission_uses_persisted_estimate(
                          warmstart_path=path)
     assert eng2.telemetry.warmstart_loaded
     # first-burst admission estimate exists BEFORE any dispatch, equals
-    # the persisted steady model (not the cold scalar EWMAs, which are 0)
-    assert eng2.stats["ewma_tpot_ms"] == 0.0
+    # the persisted steady model (zero local dispatches have happened)
+    assert eng2.stats["decode_tokens"] == 0
     probe = Request(rid=1, prompt=_prompt(cfg, 16), max_new=24)
     est = eng2._admission_estimate_ms(probe)
     assert est is not None and est > 0.0
