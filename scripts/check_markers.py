@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""Slow-marker gate: fail when a test that takes real wall time is not
+marked ``@pytest.mark.slow``.
+
+The tier-1 suite (``python -m pytest -x -q``) must stay fast enough to
+run on every change; anything expensive belongs behind the ``slow``
+marker so plain runs skip it (``REPRO_RUN_SLOW=1`` opts back in, and
+verify.sh always does).  This script closes the loop: verify.sh runs
+pytest with ``--junitxml`` and then feeds the report here.  Any testcase
+whose recorded wall time exceeds the threshold (default 20s, override
+with ``REPRO_SLOW_THRESHOLD_S``) and that is NOT collected under
+``-m slow`` fails the gate — an expensive test can land, but not
+unmarked, where it would silently tax every tier-1 run forever.
+
+Skipped testcases are exempt (their recorded time is setup-only), and a
+missing junit report is an error, not a pass — the gate must not
+green-light a run it never saw.
+
+  python scripts/check_markers.py --junit /tmp/junit.xml
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import xml.etree.ElementTree as ET
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def slow_marked_keys() -> set:
+    """(classname, name) keys of every test collected under ``-m slow``.
+
+    Uses pytest's own collector rather than grepping for decorators so
+    indirect marking (``pytestmark``, ``config.addinivalue_line``,
+    parametrized ids) is honoured.
+    """
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q",
+         "-m", "slow"],
+        cwd=ROOT, env=env, capture_output=True, text=True)
+    keys = set()
+    for line in out.stdout.splitlines():
+        line = line.strip()
+        if "::" not in line:
+            continue
+        parts = line.split("::")
+        module = parts[0][:-3].replace("/", ".")  # tests/foo.py -> tests.foo
+        classname = ".".join([module] + parts[1:-1])
+        name = parts[-1]
+        keys.add((classname, name))
+        # junit strips parametrize brackets from classname but keeps
+        # them in name; collect-only keeps them in name already, so the
+        # raw key matches — also index the bare name for safety
+        if "[" in name:
+            keys.add((classname, name.split("[", 1)[0]))
+    return keys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--junit", required=True,
+                    help="junit XML report from the tier-1 pytest run")
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get(
+                        "REPRO_SLOW_THRESHOLD_S", "20")),
+                    help="wall seconds above which a test must carry "
+                         "@pytest.mark.slow (default 20, env "
+                         "REPRO_SLOW_THRESHOLD_S)")
+    args = ap.parse_args()
+
+    junit = Path(args.junit)
+    if not junit.is_file():
+        print(f"check_markers: junit report {junit} not found — run "
+              "pytest with --junitxml first", file=sys.stderr)
+        return 1
+    try:
+        root = ET.parse(junit).getroot()
+    except ET.ParseError as e:
+        print(f"check_markers: junit report unparsable: {e}",
+              file=sys.stderr)
+        return 1
+
+    slow = slow_marked_keys()
+    offenders = []
+    checked = 0
+    for case in root.iter("testcase"):
+        if case.find("skipped") is not None:
+            continue
+        checked += 1
+        t = float(case.get("time") or 0.0)
+        if t <= args.threshold:
+            continue
+        classname = case.get("classname") or ""
+        name = case.get("name") or ""
+        key = (classname, name)
+        bare = (classname, name.split("[", 1)[0])
+        if key in slow or bare in slow:
+            continue
+        offenders.append((t, classname, name))
+
+    for t, classname, name in sorted(offenders, reverse=True):
+        print(f"check_markers: {classname}::{name} took {t:.1f}s "
+              f"(> {args.threshold:g}s) without @pytest.mark.slow",
+              file=sys.stderr)
+    if offenders:
+        print(f"check_markers: {len(offenders)} unmarked slow test(s) — "
+              "mark them @pytest.mark.slow or speed them up",
+              file=sys.stderr)
+        return 1
+    print(f"check_markers OK: {checked} testcases, none over "
+          f"{args.threshold:g}s unmarked ({len(slow)} slow-marked "
+          "collected)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,11 +11,16 @@
 # time tracks the live prefix under KV bucketing, flash-decode parity,
 # chunked-prefill parity), the fault smoke (divergence sentinels +
 # periodic checkpointing < 5% overhead on the healthy path, NaN recovery
-# replays bit-identically), and the docs freshness check (paths / REPRO_*
-# vars named in docs/*.md must exist AND every REPRO_* var the runtime
-# reads is documented — see docs/CONFIGURATION.md for the thresholds),
-# and fails if any failed (the smokes still run when pre-existing tests
-# fail, so the perf trajectories are always recorded).
+# replays bit-identically), the restart smoke (a killed engine recovers
+# from the durable checkpoint store bit-identically with recovery wall
+# < 20% of redo-from-scratch), and the docs freshness check (paths /
+# REPRO_* vars named in docs/*.md must exist AND every REPRO_* var the
+# runtime reads is documented — see docs/CONFIGURATION.md for the
+# thresholds), and fails if any failed (the smokes still run when
+# pre-existing tests fail, so the perf trajectories are always recorded).
+# check_markers.py reads the tier-1 junit report and fails if any test
+# over the wall-time threshold (REPRO_SLOW_THRESHOLD_S, default 20s)
+# lacks @pytest.mark.slow.
 #
 # The decode smoke carries the PROFILER gates: measured kernel-family
 # shares (jax.profiler trace sweep) must sum to 1, the ssm family must
@@ -33,7 +38,8 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-REPRO_RUN_SLOW=1 python -m pytest -x -q
+junit="$(mktemp -t repro-junit-XXXXXX.xml)"
+REPRO_RUN_SLOW=1 python -m pytest -x -q --junitxml "$junit"
 tier1=$?
 
 python benchmarks/decode_bench.py --smoke
@@ -48,11 +54,18 @@ attn=$?
 python benchmarks/decode_bench.py --faults
 faults=$?
 
+python benchmarks/decode_bench.py --restart
+restart=$?
+
 python scripts/check_docs.py
 docs=$?
 
 python scripts/check_clock.py
 clock=$?
 
-echo "tier1=$tier1 decode_smoke=$smoke prefill_smoke=$prefill attn_smoke=$attn fault_smoke=$faults docs_check=$docs clock_lint=$clock"
-exit $(( tier1 || smoke || prefill || attn || faults || docs || clock ))
+python scripts/check_markers.py --junit "$junit"
+markers=$?
+rm -f "$junit"
+
+echo "tier1=$tier1 decode_smoke=$smoke prefill_smoke=$prefill attn_smoke=$attn fault_smoke=$faults restart_smoke=$restart docs_check=$docs clock_lint=$clock marker_check=$markers"
+exit $(( tier1 || smoke || prefill || attn || faults || restart || docs || clock || markers ))

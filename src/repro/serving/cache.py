@@ -93,6 +93,26 @@ def _blob_schema(arrays: Dict[str, np.ndarray]) -> Dict[str, Any]:
             for k, a in sorted(arrays.items())}
 
 
+def slot_schema(cache: Any) -> Dict[str, Any]:
+    """The blob schema (key -> [shape, dtype]) an :func:`offload_slot` of
+    this cache produces, computed from leaf metadata alone — no device
+    transfer.  The durable checkpoint store fingerprints this next to the
+    config so an engine never rehydrates blobs shaped for a different
+    cache layout."""
+    out: Dict[str, Any] = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key == "pos":                         # [B]: batch on axis 0
+            shape: Tuple[int, ...] = (1,)
+        elif leaf.ndim == 0:
+            shape = ()
+        else:                                    # [n_rep, B, ...]
+            shape = (leaf.shape[0], 1) + tuple(leaf.shape[2:])
+        out[key] = [list(shape), str(leaf.dtype)]
+    return {k: out[k] for k in sorted(out)}
+
+
 def _schema_fingerprint(schema: Dict[str, Any]) -> str:
     return f"{zlib.crc32(json.dumps(schema, sort_keys=True).encode()):08x}"
 

@@ -52,10 +52,24 @@ in flight (``DeadlineExceeded``), and a no-progress watchdog
 queued) plus ``run(max_iters=...)`` bound the host loop.  All of it is
 exercised deterministically via :mod:`repro.serving.fault_inject`
 (``REPRO_FAULT_SPEC``).
+
+Durability (:mod:`repro.serving.store`): with a ``CheckpointStore``
+attached (``store=`` / ``store_dir=`` / ``REPRO_CHECKPOINT_DIR``), the
+periodic checkpoint and preemption blobs — and every request's
+metadata — persist to disk under an atomically-committed manifest.  A
+fresh engine constructed over a populated store **rehydrates**: live
+requests resume from their last durable blob (bad blobs degrade to
+replay-from-prompt), queued ones re-enter with their original priority
+and remaining deadline budget, and the resumed token streams are
+bit-identical to an uninterrupted run.  Crashes are simulated
+deterministically with ``kill`` fault clauses (``SimulatedCrash``).
 """
 from __future__ import annotations
 
+import logging
+import os
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -69,17 +83,22 @@ from repro.models.lm import (decode_tokens, init_lm_cache, lm_decode_step,
                              lm_forward, lm_prefill)
 from repro.serving.bucketing import (clamped_bucket, kv_cache_extent,
                                      rope_len_for)
-from repro.serving.cache import offload_slot, offload_slots, restore_slot
-from repro.serving.fault_inject import FaultPlan, poison_slot
+from repro.serving.cache import (blob_tags, offload_slot, offload_slots,
+                                 restore_slot, slot_schema, validate_blob)
+from repro.serving.fault_inject import FaultPlan, SimulatedCrash, poison_slot
 from repro.serving.faults import (CacheCorruption, DeadlineExceeded,
-                                  DivergenceDetected, RequestError,
-                                  SlotStalled, StarvationTimeout)
+                                  DivergenceDetected, RecoveryFailed,
+                                  RequestError, SlotStalled,
+                                  StarvationTimeout)
+from repro.serving.store import CheckpointStore, layout_fingerprint
 from repro.serving.metrics import MetricsRegistry
 from repro.serving.prefill import ChunkedPrefill, supports_chunked_prefill
 from repro.serving.profiler import Profiler
 from repro.serving.scheduler import (Scheduler, VictimCandidate,
                                      make_scheduler)
 from repro.serving.telemetry import Telemetry
+
+log = logging.getLogger("repro.serving.engine")
 
 
 def make_prefill_step(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
@@ -302,7 +321,9 @@ class ServingEngine:
                  scheduler: Optional[Scheduler] = None,
                  sched_policy: Optional[str] = None,
                  sched_weights: Optional[Dict[int, float]] = None,
-                 starve_ms: Optional[float] = None):
+                 starve_ms: Optional[float] = None,
+                 store: Optional[CheckpointStore] = None,
+                 store_dir: Optional[str] = None):
         if not supports_chunked_prefill(cfg):
             raise ValueError(
                 f"{cfg.name}: no autoregressive serving path (encoder / "
@@ -388,6 +409,21 @@ class ServingEngine:
         # the steady-state estimates feeding admission and preemption
         self._decode_seen: set = set()
         self._max_bucket = -1     # deepest decode rung seen (climb counter)
+        # durable checkpoint store (crash recovery): explicit instance >
+        # store_dir > REPRO_CHECKPOINT_DIR; None = host-memory-only FT.
+        # A populated store rehydrates NOW — in-flight requests re-enter
+        # as restore-from-blob admissions, queued ones with their
+        # original priority and REMAINING deadline budget.
+        if store is None:
+            store_dir = store_dir or os.environ.get("REPRO_CHECKPOINT_DIR")
+            store = CheckpointStore(store_dir) if store_dir else None
+        self.store = store
+        self._slot_schema = slot_schema(self.cache)
+        self._template_keys = list(self._slot_schema)
+        self._store_fp = layout_fingerprint(cfg.name, max_seq,
+                                            self._slot_schema)
+        self._store_order = 0
+        self._rehydrate()
 
     def _init_metrics(self) -> None:
         """Register this engine's instruments on the (possibly shared)
@@ -439,6 +475,14 @@ class ServingEngine:
         self._m_starved = m.counter(
             "repro_starvation_timeouts_total",
             "queued requests failed by the scheduler's starvation bound")
+        self._m_recoveries = m.counter(
+            "repro_recoveries_total",
+            "requests rehydrated from the durable checkpoint store at "
+            "engine restart, by outcome (restored/replayed/requeued/"
+            "expired/unrecoverable)")
+        self._m_recovery_ms = m.histogram(
+            "repro_recovery_ms",
+            "wall time of one engine-restart rehydration pass (ms)")
 
     def submit(self, req: Request) -> None:
         # validate here, before admission can pop the request and reserve
@@ -472,6 +516,152 @@ class ServingEngine:
         self.queue.append(req)
         self._m_submitted.inc()
         self._m_queue.set(len(self.queue))
+        if self.store is not None:
+            self._persist_request(req, state="queued")
+            self.store.commit()
+
+    # -------------------------------------------------------- durability
+    def _persist_request(self, req: Request, *, state: str,
+                         next_token: int = 0, pos: int = 0) -> None:
+        """Write/refresh ``req``'s manifest record (uncommitted).  The
+        record alone is enough to REPLAY the request from its prompt;
+        with a staged blob it restores mid-stream.  ``age_ms`` (budget
+        already consumed) + the persist-time clock reading let the next
+        engine resurrect the deadline as *remaining* budget, and
+        ``prompt_crc`` guards against a record whose replay would decode
+        a different request."""
+        p = np.asarray(req.prompt, np.int64)
+        rec = self.store.record(
+            req.rid, state=state,
+            prompt=[int(x) for x in req.prompt],
+            prompt_crc=zlib.crc32(p.tobytes()),
+            max_new=int(req.max_new), priority=int(req.priority),
+            deadline_ms=req.deadline_ms,
+            age_ms=(self._clock() - req.submit_t) * 1e3, t=self._clock(),
+            out=list(req.out), next_token=int(next_token), pos=int(pos))
+        if "order" not in rec:           # admission order survives restart
+            rec["order"] = self._store_order
+            self._store_order += 1
+
+    def _forget_request(self, req: Request) -> None:
+        """Terminal state reached: the durable record (and its blob
+        files, at the next prune) has nothing left to recover."""
+        if self.store is not None:
+            self.store.forget(req.rid)
+            self.store.commit()
+
+    def _rehydrate(self) -> None:
+        """Resurrect a crashed engine's work from the durable store (at
+        construction).  Per persisted record, in admission order:
+
+        * expired while down — the consumed budget (pre-crash ``age_ms``
+          + downtime) already exceeds ``deadline_ms``: fail with
+          ``DeadlineExceeded`` NOW, before any replay work is wasted.
+        * prompt fails its recorded crc32 — nothing can reproduce the
+          original stream (``RecoveryFailed``); corrupt *blobs* are the
+          recoverable case below, this is not.
+        * in-flight with a durable checkpoint/preemption blob — validate
+          it (crc/schema/identity-tag, exactly like a preemption
+          restore); good blobs re-enter as restore-from-blob admissions
+          with the already-decoded output reattached ("restored"), bad
+          blobs degrade to replay-from-prompt ("replayed") — never a
+          crash.
+        * queued-but-unstarted — requeued with original priority
+          ("requeued").
+
+        ``submit_t`` is back-dated by the consumed budget so deadlines
+        resume as REMAINING budget, not a fresh TTL.  Outcome counts
+        land on :attr:`recovery` and ``repro_recoveries_total``."""
+        self.recovery: Dict[str, int] = {
+            "restored": 0, "replayed": 0, "requeued": 0,
+            "expired": 0, "unrecoverable": 0}
+        if self.store is None:
+            return
+        fp = self.store.manifest.get("fingerprint")
+        if fp is not None and fp != self._store_fp:
+            # a store written by a different config / cache geometry:
+            # refuse to adopt it (rehydrating would scatter mis-shaped
+            # rows; writing to it would corrupt the other engine's state)
+            log.warning(
+                "checkpoint store %s: layout fingerprint %s does not "
+                "match this engine's %s (config %r, max_seq %d); "
+                "ignoring the store", self.store.root, fp, self._store_fp,
+                self.cfg.name, self.max_seq)
+            self.store = None
+            return
+        t0 = self._clock()
+        recs = sorted(self.store.requests.values(),
+                      key=lambda r: r.get("order", 0))
+        if recs:
+            self._store_order = max(r.get("order", 0) for r in recs) + 1
+        for rec in list(recs):
+            rid = int(rec["rid"])
+            prompt = np.asarray(rec.get("prompt") or [], np.int32)
+            req = Request(rid=rid, prompt=prompt,
+                          max_new=int(rec.get("max_new", 0)),
+                          deadline_ms=rec.get("deadline_ms"),
+                          priority=int(rec.get("priority", 0)))
+            now = self._clock()
+            # downtime on top of the budget consumed pre-crash; clamped
+            # at 0 for clocks that restart from an earlier origin
+            downtime_ms = max(0.0, (now - float(rec.get("t", now))) * 1e3)
+            consumed_ms = float(rec.get("age_ms", 0.0)) + downtime_ms
+            req.submit_t = now - consumed_ms / 1e3
+            self.telemetry.begin_span(
+                rid, prompt_len=len(prompt), max_new=req.max_new,
+                deadline_ms=req.deadline_ms, priority=req.priority,
+                t=req.submit_t, rehydrated=rec.get("state", "queued"))
+            if (req.deadline_ms is not None
+                    and consumed_ms >= req.deadline_ms):
+                self.recovery["expired"] += 1
+                self._m_recoveries.labels(outcome="expired").inc()
+                self._fail(req, "timed_out", DeadlineExceeded(
+                    f"deadline expired while the engine was down "
+                    f"({consumed_ms:.1f}ms consumed of "
+                    f"{req.deadline_ms:.1f}ms)", rid=rid))
+                continue
+            crc = rec.get("prompt_crc")
+            if (len(prompt) == 0 or (crc is not None and int(crc) !=
+                    zlib.crc32(np.asarray(prompt, np.int64).tobytes()))):
+                self.recovery["unrecoverable"] += 1
+                self._m_recoveries.labels(outcome="unrecoverable").inc()
+                self._fail(req, "failed", RecoveryFailed(
+                    "persisted prompt fails its recorded crc32 — replay "
+                    "would decode a different request", rid=rid))
+                continue
+            outcome = "requeued"
+            if rec.get("state") != "queued":
+                outcome = "replayed"
+                # only the NEWEST blob matches the record's resume point
+                # (out/next_token/pos are persisted alongside it); any
+                # failure degrades to replay-from-prompt
+                rels = rec.get("blobs") or []
+                if rels:
+                    try:
+                        blob = self.store.load_blob(rels[0])
+                        validate_blob(blob, self._template_keys, rid=rid)
+                        tags = blob_tags(blob)
+                        if "rid" in tags and tags["rid"] != rid:
+                            raise CacheCorruption(
+                                f"durable blob carries rid {tags['rid']!r}",
+                                rid=rid)
+                        req.blob = blob
+                        req.next_token = int(rec.get("next_token", 0))
+                        req.resume_pos = int(rec.get("pos", 0))
+                        req.out = [int(x) for x in rec.get("out") or []]
+                        outcome = "restored"
+                    except CacheCorruption as e:
+                        log.warning("rid=%d: durable blob rejected (%s); "
+                                    "replaying from prompt", rid, e)
+            self.queue.append(req)
+            self.recovery[outcome] += 1
+            self._m_recoveries.labels(outcome=outcome).inc()
+            self.telemetry.event(rid, "rehydrate", detail=outcome)
+        self.store.set_fingerprint(self._store_fp)
+        self.store.commit()
+        self._m_queue.set(len(self.queue))
+        if recs:
+            self._m_recovery_ms.observe((self._clock() - t0) * 1e3)
 
     # ------------------------------------------------------------ failures
     def _fail(self, req: Request, status: str,
@@ -489,6 +679,7 @@ class ServingEngine:
         self.stats[{"failed": "failures", "timed_out": "timeouts",
                     "cancelled": "cancelled"}[status]] += 1
         self._m_finished.labels(status=status).inc()
+        self._forget_request(req)
 
     def _expired(self, req: Request, now: float) -> bool:
         return self.scheduler.expired(req, now)
@@ -761,6 +952,15 @@ class ServingEngine:
         req.next_token = int(self.tokens[b, 0])
         req.resume_pos = int(self.pos[b])
         req.preemptions += 1
+        if self.store is not None:
+            # a preemption blob is already a consistent resume point —
+            # persist it so a crash while the request sits requeued
+            # restores mid-stream instead of replaying the whole prefix
+            self.store.stage_blob(req.rid, blob)
+            self._persist_request(req, state="preempted",
+                                  next_token=req.next_token,
+                                  pos=req.resume_pos)
+            self.store.commit()
         self.telemetry.event(req.rid, "preempt", pos=int(self.pos[b]))
         self.live[b] = None
         self.queue.append(req)
@@ -799,11 +999,24 @@ class ServingEngine:
             req.ckpt_token = int(self.tokens[b, 0])
             req.ckpt_pos = int(self.pos[b])
             req.ckpt_out = len(req.out)
+            if self.store is not None:
+                self.store.stage_blob(req.rid, blob)
+                self._persist_request(req, state="live",
+                                      next_token=req.ckpt_token,
+                                      pos=req.ckpt_pos)
             self.stats["checkpoints"] += 1
             self._m_ckpts.inc()
             self._m_ckpt_bytes.inc(sum(
                 v.nbytes for v in blob.values() if hasattr(v, "nbytes")))
             self.telemetry.event(req.rid, "checkpoint")
+        if self.store is not None:
+            # crash point 1: blob files staged, manifest commit not yet
+            # landed — recovery must see the PREVIOUS manifest intact
+            if self.faults.active and self.faults.kill_now(it, point=1):
+                raise SimulatedCrash(
+                    "fault injection: kill between checkpoint stage and "
+                    f"manifest commit at iteration {it}")
+            self.store.commit()
         # observability for the < 5% healthy-path overhead budget: the
         # fault smoke gates on ckpt_ms / wall time
         self.stats["ckpt_ms"] += (self._clock() - t0) * 1e3
@@ -883,6 +1096,11 @@ class ServingEngine:
         excluded).  Never raises for in-flight faults — failing requests
         land on :attr:`finished` with a structured status."""
         it = self.stats["iters"]
+        # crash point 0: between iterations, before any state mutates —
+        # everything committed through iteration it-1 must recover
+        if self.faults.active and self.faults.kill_now(it):
+            raise SimulatedCrash(
+                f"fault injection: kill at engine iteration {it}")
         self.stats["iters"] += 1
         self._chunk_ran = False
         self._progress = False
@@ -976,6 +1194,7 @@ class ServingEngine:
                 self._m_finished.labels(status="ok").inc()
                 self.telemetry.end_span(req.rid, "ok",
                                         tokens_out=len(req.out))
+                self._forget_request(req)
                 self.live[b] = None
             else:
                 n_live += 1
@@ -1009,6 +1228,8 @@ class ServingEngine:
             # flush metrics — both no-ops unless a path is configured
             self.telemetry.save_warmstart()
             self.metrics.export()
+            if self.store is not None:
+                self.store.commit()
         return self.finished
 
     def profile_snapshot(self) -> Dict[str, Any]:

@@ -29,6 +29,16 @@ Spec grammar (``REPRO_FAULT_SPEC``)::
                                        at engine iteration I (for N
                                        iterations; default forever —
                                        the watchdog's trip condition)
+    kill@iter=I[:point=P][:n=N]        raise :class:`SimulatedCrash` at
+                                       engine iteration >= I — a process
+                                       death the durable checkpoint
+                                       store must survive.  point=0
+                                       (default) kills between
+                                       iterations (before any state
+                                       mutates); point=1 kills inside
+                                       ``_checkpoint``, after blob files
+                                       are staged but before the
+                                       manifest commit lands
 
 Example::
 
@@ -49,16 +59,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-KINDS = ("nan_decode", "nan_prefill", "corrupt_blob", "stall")
+KINDS = ("nan_decode", "nan_prefill", "corrupt_blob", "stall", "kill")
 
 _DEFAULTS = {
     "nan_decode": {"slot": 0, "n": 1},
     "nan_prefill": {"row": 0, "n": 1},
     "corrupt_blob": {"n": 1},
     "stall": {"n": -1},
+    "kill": {"point": 0, "n": 1},
 }
 _REQUIRED = {"nan_decode": ("iter",), "nan_prefill": ("chunk",),
-             "corrupt_blob": ("rid",), "stall": ("iter",)}
+             "corrupt_blob": ("rid",), "stall": ("iter",),
+             "kill": ("iter",)}
+
+
+class SimulatedCrash(RuntimeError):
+    """A deterministic process death injected by a ``kill`` clause.
+
+    Deliberately NOT a :class:`repro.serving.faults.RequestError`: it
+    models the whole engine dying, not one request failing, so it
+    escapes ``ServingEngine.run`` instead of being quarantined — exactly
+    like a real SIGKILL would.  Restart-recovery tests construct a fresh
+    engine over the same :class:`~repro.serving.store.CheckpointStore`
+    and assert the resumed stream is bit-identical."""
 
 
 @dataclass
@@ -159,6 +182,16 @@ class FaultPlan:
                 continue
             start, n = c.params["iter"], c.params["n"]
             if it >= start and (n < 0 or it < start + n):
+                return True
+        return False
+
+    def kill_now(self, it: int, point: int = 0) -> bool:
+        """True when a ``kill`` clause for crash-point ``point`` fires at
+        engine iteration ``it`` — the engine raises
+        :class:`SimulatedCrash` at that exact spot."""
+        for c in self.clauses:
+            if (c.kind == "kill" and c.params["point"] == point
+                    and it >= c.params["iter"] and c._spend()):
                 return True
         return False
 

@@ -78,6 +78,15 @@ class CacheCorruption(RequestError):
                          rid=rid)
 
 
+class RecoveryFailed(RequestError):
+    """A persisted request record could not be reconstructed at engine
+    restart: the stored prompt fails its recorded crc32 (or the record is
+    otherwise internally inconsistent), so neither restore-from-blob nor
+    replay-from-prompt can produce the original stream.  Corrupt *blobs*
+    never raise this — they degrade to replay-from-prompt; this is for
+    records where even replay would decode a different request."""
+
+
 class SlotStalled(RequestError):
     """The engine's no-progress watchdog tripped: N consecutive iterations
     decoded zero tokens and advanced no prefill chunk while work was

@@ -318,13 +318,19 @@ class Telemetry:
     # -------------------------------------------------------- span traces
     def begin_span(self, rid: int, *, prompt_len: int, max_new: int,
                    deadline_ms: Optional[float] = None,
-                   priority: int = 0, t: Optional[float] = None) -> None:
+                   priority: int = 0, t: Optional[float] = None,
+                   **fields: Any) -> None:
+        """Open ``rid``'s span.  Extra ``fields`` land on the span record
+        verbatim — the engine's restart-recovery path stamps
+        ``rehydrated=<outcome>`` so a resumed request's trace says it
+        crossed a process boundary (its ``submit_t`` is back-dated to
+        preserve the deadline budget already consumed)."""
         self._spans[rid] = {
             "version": TRACE_SCHEMA_VERSION, "arch": self.arch,
             "rid": rid, "submit_t": self._clock() if t is None else t,
             "prompt_len": int(prompt_len), "max_new": int(max_new),
             "deadline_ms": deadline_ms, "priority": int(priority),
-            "status": "pending", "events": []}
+            "status": "pending", "events": [], **fields}
 
     def first_token(self, rid: int) -> Optional[float]:
         """Mark ``rid``'s first emitted token and return its TTFT in ms

@@ -1,12 +1,22 @@
 """Serving cache administration: slot extract/insert/offload roundtrip +
-admission sizing."""
+admission sizing, the durable-store blob container round-trip
+(serialize -> deserialize -> validate -> restore, with every single-byte
+payload mutation and tag-field mutation rejected), and the pinned
+legacy tag-less-blob compatibility path."""
+import json
+
 import jax
 import numpy as np
+import pytest
 
 from repro.core.config import AttnConfig, ModelConfig, SSMConfig
 from repro.models.lm import init_lm_cache
-from repro.serving.cache import (cache_bytes, extract_slot, insert_slot,
-                                 max_slots, offload_slot, restore_slot)
+from repro.serving.cache import (BLOB_META_KEY, blob_tags, cache_bytes,
+                                 extract_slot, insert_slot, max_slots,
+                                 offload_slot, restore_slot, slot_schema,
+                                 validate_blob)
+from repro.serving.faults import CacheCorruption
+from repro.serving.store import BLOB_MAGIC, dump_blob, parse_blob
 
 
 def _cfg():
@@ -46,3 +56,185 @@ def test_admission_sizing():
     n = max_slots(cfg, 2048, hbm_budget=100 * per + 5e6, weight_bytes=5e6)
     assert n == 100
     assert max_slots(cfg, 2048, hbm_budget=1e3, weight_bytes=5e6) == 0
+
+
+# ----------------------------------------------------- durable container
+def _filled_cache(pos=5):
+    """A batch-3 hybrid cache with recognizable payload and a nonzero
+    live prefix (so attention-KV live-bounded crcs cover real bytes)."""
+    cache = init_lm_cache(_cfg(), 3, 32)
+    cache = jax.tree_util.tree_map(
+        lambda x: (jax.numpy.ones_like(x) * 7 if x.ndim else x), cache)
+    return dict(cache, pos=jax.numpy.full((3,), pos, jax.numpy.int32))
+
+
+def _payload_offsets(data: bytes):
+    """(payload_start, {key: (offset, nbytes)}) of a serialized blob."""
+    hlen = int.from_bytes(data[len(BLOB_MAGIC):len(BLOB_MAGIC) + 8],
+                          "little")
+    start = len(BLOB_MAGIC) + 8 + hlen
+    header = json.loads(data[len(BLOB_MAGIC) + 8:start])
+    return start, {k: (d["offset"], d["nbytes"])
+                   for k, d in header["arrays"].items()}
+
+
+def test_store_container_roundtrip_restores_bit_exact():
+    cache = _filled_cache()
+    blob = offload_slot(cache, 1, tags={"rid": 7, "priority": 2})
+    back = parse_blob(dump_blob(blob))
+    assert back[BLOB_META_KEY] == blob[BLOB_META_KEY]
+    assert blob_tags(back) == {"rid": 7, "priority": 2}
+    keys = [k for k in blob if k != BLOB_META_KEY]
+    validate_blob(back, keys)
+    fresh = init_lm_cache(_cfg(), 3, 32)
+    fresh = restore_slot(fresh, back, 2, expect_tags={"rid": 7})
+    got = extract_slot(fresh, 2)
+    want = extract_slot(cache, 1)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_store_container_rejects_any_first_byte_flip():
+    """Deterministic sweep: flipping the FIRST payload byte of every
+    array region (always inside the live-crc-covered prefix) must fail
+    validation naming a key — no key's region is silently mutable."""
+    cache = _filled_cache()
+    blob = offload_slot(cache, 0, tags={"rid": 3})
+    data = dump_blob(blob)
+    start, regions = _payload_offsets(data)
+    keys = [k for k in blob if k != BLOB_META_KEY]
+    for k, (off, nbytes) in regions.items():
+        if nbytes == 0:
+            continue
+        damaged = bytearray(data)
+        damaged[start + off] ^= 0x01
+        with pytest.raises(CacheCorruption):
+            validate_blob(parse_blob(bytes(damaged)), keys)
+
+
+def test_store_container_rejects_truncation():
+    blob = offload_slot(_filled_cache(), 0)
+    data = dump_blob(blob)
+    for cut in (len(data) - 1, len(data) // 2, len(BLOB_MAGIC) + 4, 3):
+        with pytest.raises(CacheCorruption):
+            parse_blob(data[:cut])
+
+
+def test_store_container_rejects_tag_mutation():
+    """A mutated identity tag must be refused at restore even though
+    every payload crc still passes (the blob is honest about its bytes,
+    dishonest about whose bytes they are)."""
+    cache = _filled_cache()
+    blob = offload_slot(cache, 0, tags={"rid": 7})
+    back = parse_blob(dump_blob(blob))
+    meta = json.loads(back[BLOB_META_KEY])
+    meta["tags"]["rid"] = 8
+    back[BLOB_META_KEY] = json.dumps(meta)
+    fresh = init_lm_cache(_cfg(), 3, 32)
+    with pytest.raises(CacheCorruption):
+        restore_slot(fresh, back, 0, expect_tags={"rid": 7})
+
+
+def test_legacy_tagless_blob_compat_pinned():
+    """REGRESSION PIN: meta-less blobs (written before the ``__meta__``
+    integrity record existed) must keep passing the key-set-only path in
+    ``validate_blob`` AND restore under ``expect_tags`` (no tags = no
+    mismatch) — a future tag-schema bump must not silently drop this."""
+    cache = _filled_cache()
+    blob = offload_slot(cache, 1)
+    legacy = {k: v for k, v in blob.items() if k != BLOB_META_KEY}
+    keys = list(legacy)
+    validate_blob(legacy, keys)                       # key-set check only
+    assert blob_tags(legacy) == {}
+    fresh = init_lm_cache(_cfg(), 3, 32)
+    fresh = restore_slot(fresh, legacy, 0, expect_tags={"rid": 42})
+    got = extract_slot(fresh, 0)
+    want = extract_slot(cache, 1)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a legacy blob survives the durable container meta-less
+    back = parse_blob(dump_blob(legacy))
+    assert BLOB_META_KEY not in back
+    validate_blob(back, keys)
+    # and the key-set diff still rejects structural damage
+    short = dict(legacy)
+    short.pop(keys[0])
+    with pytest.raises(CacheCorruption):
+        validate_blob(short, keys)
+
+
+def test_slot_schema_matches_offload():
+    cache = init_lm_cache(_cfg(), 3, 32)
+    blob = offload_slot(cache, 0)
+    want = {k: [list(v.shape), str(v.dtype)]
+            for k, v in blob.items() if k != BLOB_META_KEY}
+    assert slot_schema(cache) == want
+
+
+def test_blob_roundtrip_property():
+    """Hypothesis sweep (skipped where hypothesis is absent): arbitrary
+    dtypes/shapes/pos through offload_slot -> serialize -> deserialize ->
+    validate_blob -> restore_slot round-trip bit-exactly, and ANY single
+    mutated payload byte or tag field is rejected."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    dtypes = st.sampled_from(["float32", "float16", "int32", "int8"])
+    shapes = st.lists(st.integers(1, 4), min_size=0, max_size=2)
+
+    @settings(max_examples=20, deadline=None)
+    @given(data=st.data())
+    def prop(data):
+        batch = 2
+        n_leaves = data.draw(st.integers(1, 3), label="n_leaves")
+        seg = {}
+        for i in range(n_leaves):
+            n_rep = data.draw(st.integers(1, 2), label=f"n_rep{i}")
+            dims = tuple(data.draw(shapes, label=f"dims{i}"))
+            dt = data.draw(dtypes, label=f"dtype{i}")
+            shape = (n_rep, batch) + dims
+            n = int(np.prod(shape))
+            arr = (np.arange(1, n + 1) % 120 + 1).reshape(shape)
+            seg[f"leaf{i}"] = jax.numpy.asarray(arr.astype(dt))
+        pos = data.draw(st.integers(0, 7), label="pos")
+        cache = {"segments": [seg],
+                 "pos": jax.numpy.full((batch,), pos, jax.numpy.int32)}
+        rid = data.draw(st.integers(0, 99), label="rid")
+        blob = offload_slot(cache, 1, tags={"rid": rid})
+        wire = dump_blob(blob)
+        back = parse_blob(wire)
+        keys = [k for k in blob if k != BLOB_META_KEY]
+        validate_blob(back, keys)
+        zero = jax.tree_util.tree_map(jax.numpy.zeros_like, cache)
+        restored = restore_slot(zero, back, 0, expect_tags={"rid": rid})
+        got = extract_slot(restored, 0)
+        want = extract_slot(cache, 1)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # any single mutated payload byte is rejected
+        start, _ = _payload_offsets(wire)
+        if len(wire) > start:
+            byte = data.draw(st.integers(0, len(wire) - start - 1),
+                             label="flip_byte")
+            bit = data.draw(st.integers(0, 7), label="flip_bit")
+            damaged = bytearray(wire)
+            damaged[start + byte] ^= (1 << bit)
+            with pytest.raises(CacheCorruption):
+                validate_blob(parse_blob(bytes(damaged)), keys)
+        # any mutated tag field is rejected at restore
+        tampered = dict(back)
+        meta = json.loads(tampered[BLOB_META_KEY])
+        meta["tags"]["rid"] = rid + 1
+        tampered[BLOB_META_KEY] = json.dumps(meta)
+        with pytest.raises(CacheCorruption):
+            restore_slot(zero, tampered, 0, expect_tags={"rid": rid})
+        # any truncation is rejected
+        cut = data.draw(st.integers(0, len(wire) - 1), label="cut")
+        with pytest.raises(CacheCorruption):
+            validate_blob(parse_blob(wire[:cut]), keys)
+
+    prop()

@@ -1,0 +1,363 @@
+"""Crash-durability matrix: a ServingEngine killed at exact points must
+restart from its durable :class:`CheckpointStore` and resume every
+request's token stream BIT-IDENTICALLY with an uninterrupted run.
+
+Kill points (deterministic ``kill`` fault clauses raising
+``SimulatedCrash``): mid-prefill, mid-decode, between checkpoint stage
+and manifest commit, and post-completion of one co-batched request.
+Damage tolerance: a torn (truncated) blob file degrades that request to
+replay-from-prompt (still bit-identical), a torn manifest cold-starts
+the store, a foreign layout fingerprint is refused, and a record whose
+prompt fails its crc is the only unrecoverable case (``RecoveryFailed``).
+Deadlines survive restart as REMAINING budget against the injectable
+clock — expired-while-down requests fail at rehydration, before any
+replay work is wasted.
+
+The tier-1 subset runs the four kill points on the hybrid toy config
+(the richest cache pytree: SSM state + shared-attention KV); the slow
+sweep extends to dense/mamba2 × ref/interpret backends."""
+import json
+from functools import lru_cache
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.config import AttnConfig, ModelConfig, SSMConfig
+from repro.kernels import dispatch
+from repro.models.lm import init_lm_params
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.fault_inject import FaultPlan, SimulatedCrash, parse_spec
+from repro.serving.faults import DeadlineExceeded, RecoveryFailed
+from repro.serving.store import MANIFEST_NAME, CheckpointStore
+
+KEY = jax.random.PRNGKey(0)
+
+# kill points of the matrix: spec -> where the process dies.
+# iter=1: rid1 (short prompt) is live, rid0 still mid-prefill.
+# iter=2: both rids decoding, each with a committed durable checkpoint.
+# iter=2:point=1: blob files staged, manifest commit never lands.
+# iter=4: rid0 already finished (forgotten from the store) pre-crash.
+KILL_SPECS = {
+    "mid_prefill": "kill@iter=1",
+    "mid_decode": "kill@iter=2",
+    "ckpt_manifest_gap": "kill@iter=2:point=1",
+    "post_completion": "kill@iter=4",
+}
+
+#: per-rid decode budgets: rid0 finishes early (exercising terminal
+#: forget), rid1 decodes long enough to cross several checkpoints
+MAX_NEW = (6, 24)
+
+ENG_KW = dict(slots=2, max_seq=48, decode_block=4, chunk_size=8,
+              checkpoint_every=2)
+
+
+def _cfg(arch: str) -> ModelConfig:
+    if arch == "dense":
+        return ModelConfig(name="dense", family="dense", n_layers=2,
+                           d_model=64, d_ff=128, vocab_size=97,
+                           attn=AttnConfig(n_heads=4, n_kv_heads=2,
+                                           head_dim=16),
+                           layer_pattern=("dense",), vocab_pad_multiple=16)
+    if arch == "mamba2":
+        return ModelConfig(name="mamba2", family="ssm", n_layers=2,
+                           d_model=64, d_ff=0, vocab_size=97,
+                           ssm=SSMConfig(d_state=16, headdim=16, chunk=8),
+                           layer_pattern=("mamba2",), vocab_pad_multiple=16)
+    assert arch == "hybrid"
+    return ModelConfig(name="hyb", family="hybrid", n_layers=4, d_model=64,
+                       d_ff=0, vocab_size=97,
+                       ssm=SSMConfig(d_state=16, headdim=16, chunk=8),
+                       layer_pattern=("mamba2", "mamba2+shared"),
+                       shared_attn=AttnConfig(n_heads=4, n_kv_heads=4,
+                                              head_dim=16),
+                       shared_attn_d_ff=128, vocab_pad_multiple=16)
+
+
+@lru_cache(maxsize=None)
+def _setup(arch: str):
+    cfg = _cfg(arch)
+    return cfg, init_lm_params(cfg, KEY)
+
+
+def _prompts(cfg, lens=(9, 6), seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, cfg.vocab_size, int(n)).astype(np.int32)
+            for n in lens]
+
+
+class FakeClock:
+    """Injectable engine clock (seconds, monotonic-shaped).  Shared
+    between a crashed engine and its successor, it models wall time
+    flowing THROUGH the crash — the remaining-deadline-budget tests
+    depend on that continuity."""
+
+    def __init__(self, tick_ms=0.0):
+        self.t = 0.0
+        self.tick = tick_ms / 1e3
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+def _engine(arch, store=None, plan=None, clock=None, decode_n=None):
+    cfg, params = _setup(arch)
+    eng = ServingEngine(cfg, params, fault_plan=plan, store=store,
+                        clock=clock, **ENG_KW)
+    if decode_n is not None:
+        # share the jitted decode callable so restarted engines hit the
+        # executable cache instead of re-paying XLA compiles per engine
+        eng._decode_n = decode_n
+    return eng
+
+
+def _submit_all(eng, prompts, deadline_ms=None):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=MAX_NEW[i],
+                           deadline_ms=deadline_ms))
+
+
+# reference (uninterrupted) outputs per (arch, backend), computed once —
+# the shared decode callable rides along for the crash/restart engines
+_REF_CACHE = {}
+
+
+def _reference(arch, backend="default"):
+    key = (arch, backend)
+    if key not in _REF_CACHE:
+        cfg, _ = _setup(arch)
+        eng = _engine(arch)
+        _submit_all(eng, _prompts(cfg))
+        eng.run(max_iters=300)
+        assert all(r.status == "ok" for r in eng.finished)
+        _REF_CACHE[key] = ({r.rid: list(r.out) for r in eng.finished},
+                           eng._decode_n)
+    return _REF_CACHE[key]
+
+
+def _crash_and_restart(arch, spec, store_dir, backend="default"):
+    """Run the crash → restart → resume protocol and assert the combined
+    decoded streams are bit-identical to the uninterrupted reference.
+    Returns (crashed engine, restarted engine)."""
+    cfg, _ = _setup(arch)
+    ref_out, decode_n = _reference(arch, backend)
+    eng1 = _engine(arch, store=CheckpointStore(store_dir),
+                   plan=FaultPlan.from_spec(spec), decode_n=decode_n)
+    _submit_all(eng1, _prompts(cfg))
+    with pytest.raises(SimulatedCrash):
+        eng1.run(max_iters=300)
+    pre_ok = {r.rid: list(r.out) for r in eng1.finished
+              if r.status == "ok"}
+    eng2 = _engine(arch, store=CheckpointStore(store_dir),
+                   decode_n=decode_n)
+    eng2.run(max_iters=300)
+    assert all(r.status == "ok" for r in eng2.finished), \
+        [(r.rid, r.status, str(r.error)) for r in eng2.finished]
+    combined = dict(pre_ok)
+    combined.update({r.rid: list(r.out) for r in eng2.finished})
+    assert combined == ref_out
+    return eng1, eng2
+
+
+# ------------------------------------------------------------- kill matrix
+@pytest.mark.parametrize("point", sorted(KILL_SPECS))
+def test_kill_point_recovers_bit_identical(point, tmp_path):
+    eng1, eng2 = _crash_and_restart("hybrid", KILL_SPECS[point],
+                                    str(tmp_path / "store"))
+    rec = eng2.recovery
+    if point == "mid_prefill":
+        # the long prompt never reached a checkpoint: replayed as a
+        # fresh queued admission with its original priority
+        assert rec["requeued"] + rec["replayed"] >= 1
+    if point in ("mid_decode", "ckpt_manifest_gap"):
+        assert rec["restored"] >= 1
+    if point == "post_completion":
+        # rid0 finished pre-crash: its record was forgotten, only rid1
+        # survives in the store — completed work is never re-decoded
+        assert sum(rec.values()) == 1
+        assert any(r.rid == 0 and r.status == "ok"
+                   for r in eng1.finished)
+    assert rec["expired"] == rec["unrecoverable"] == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,backend", [
+    ("dense", "ref"), ("mamba2", "ref"),
+    ("dense", "interpret"), ("mamba2", "interpret"),
+    ("hybrid", "interpret"),
+])
+@pytest.mark.parametrize("point", sorted(KILL_SPECS))
+def test_kill_matrix_sweep(arch, backend, point, tmp_path):
+    with dispatch.use_backend(backend):
+        _crash_and_restart(arch, KILL_SPECS[point],
+                           str(tmp_path / "store"), backend=backend)
+
+
+# --------------------------------------------------------- damage handling
+def test_torn_blob_replays_from_prompt(tmp_path):
+    """Every durable blob truncated to half: restart must degrade to
+    replay-from-prompt (CacheCorruption handled, never raised) and the
+    replayed streams stay bit-identical."""
+    store_dir = tmp_path / "store"
+    cfg, _ = _setup("hybrid")
+    ref_out, decode_n = _reference("hybrid")
+    eng1 = _engine("hybrid", store=CheckpointStore(str(store_dir)),
+                   plan=FaultPlan.from_spec("kill@iter=2"),
+                   decode_n=decode_n)
+    _submit_all(eng1, _prompts(cfg))
+    with pytest.raises(SimulatedCrash):
+        eng1.run(max_iters=300)
+    blobs = list((store_dir / "blobs").glob("*.blob"))
+    assert blobs
+    for f in blobs:
+        f.write_bytes(f.read_bytes()[:max(1, f.stat().st_size // 2)])
+    eng2 = _engine("hybrid", store=CheckpointStore(str(store_dir)),
+                   decode_n=decode_n)
+    assert eng2.recovery["replayed"] >= 1
+    assert eng2.recovery["restored"] == 0
+    eng2.run(max_iters=300)
+    assert {r.rid: list(r.out) for r in eng2.finished} == ref_out
+    assert all(r.status == "ok" for r in eng2.finished)
+
+
+def test_torn_manifest_cold_starts(tmp_path):
+    store_dir = tmp_path / "store"
+    cfg, _ = _setup("hybrid")
+    _, decode_n = _reference("hybrid")
+    eng1 = _engine("hybrid", store=CheckpointStore(str(store_dir)),
+                   plan=FaultPlan.from_spec("kill@iter=2"),
+                   decode_n=decode_n)
+    _submit_all(eng1, _prompts(cfg))
+    with pytest.raises(SimulatedCrash):
+        eng1.run(max_iters=300)
+    (store_dir / MANIFEST_NAME).write_bytes(b'{"version": 1, "requ')
+    eng2 = _engine("hybrid", store=CheckpointStore(str(store_dir)),
+                   decode_n=decode_n)
+    # nothing consistent to recover -> cold store, zero rehydrations,
+    # and the engine still serves fresh work through the same store
+    assert sum(eng2.recovery.values()) == 0
+    _submit_all(eng2, _prompts(cfg))
+    eng2.run(max_iters=300)
+    assert all(r.status == "ok" for r in eng2.finished)
+
+
+def test_foreign_fingerprint_refused(tmp_path):
+    """A store written under a different config/cache layout is ignored
+    (never adopted, never overwritten) — the engine comes up empty."""
+    store_dir = str(tmp_path / "store")
+    cfg, _ = _setup("hybrid")
+    _, decode_n = _reference("hybrid")
+    eng1 = _engine("hybrid", store=CheckpointStore(store_dir),
+                   plan=FaultPlan.from_spec("kill@iter=2"),
+                   decode_n=decode_n)
+    _submit_all(eng1, _prompts(cfg))
+    with pytest.raises(SimulatedCrash):
+        eng1.run(max_iters=300)
+    eng2 = _engine("dense", store=CheckpointStore(store_dir))
+    assert eng2.store is None
+    assert sum(eng2.recovery.values()) == 0
+    # the hybrid records are still intact on disk for the RIGHT engine
+    eng3 = _engine("hybrid", store=CheckpointStore(store_dir),
+                   decode_n=decode_n)
+    assert sum(eng3.recovery.values()) == 2
+
+
+def test_tampered_prompt_is_unrecoverable(tmp_path):
+    """prompt crc mismatch is the one non-degradable damage: replay
+    would decode a DIFFERENT request, so rehydration fails the record
+    with RecoveryFailed instead of quietly serving wrong tokens."""
+    store_dir = tmp_path / "store"
+    cfg, _ = _setup("hybrid")
+    _, decode_n = _reference("hybrid")
+    eng1 = _engine("hybrid", store=CheckpointStore(str(store_dir)),
+                   plan=FaultPlan.from_spec("kill@iter=2"),
+                   decode_n=decode_n)
+    _submit_all(eng1, _prompts(cfg))
+    with pytest.raises(SimulatedCrash):
+        eng1.run(max_iters=300)
+    man_path = store_dir / MANIFEST_NAME
+    man = json.loads(man_path.read_text())
+    man["requests"]["0"]["prompt"][0] += 1
+    man_path.write_text(json.dumps(man))
+    eng2 = _engine("hybrid", store=CheckpointStore(str(store_dir)),
+                   decode_n=decode_n)
+    assert eng2.recovery["unrecoverable"] == 1
+    bad = [r for r in eng2.finished if r.rid == 0]
+    assert bad and bad[0].status == "failed"
+    assert isinstance(bad[0].error, RecoveryFailed)
+    eng2.run(max_iters=300)
+    good = {r.rid: r for r in eng2.finished}
+    assert good[1].status == "ok"
+
+
+# ----------------------------------------------------------- deadlines
+def test_deadline_expired_while_down_fails_at_rehydration(tmp_path):
+    """Budget consumed by downtime: the request must fail with
+    DeadlineExceeded AT CONSTRUCTION — zero replay iterations wasted."""
+    clock = FakeClock()
+    store_dir = str(tmp_path / "store")
+    cfg, _ = _setup("hybrid")
+    _, decode_n = _reference("hybrid")
+    eng1 = _engine("hybrid", store=CheckpointStore(store_dir),
+                   plan=FaultPlan.from_spec("kill@iter=2"), clock=clock,
+                   decode_n=decode_n)
+    _submit_all(eng1, _prompts(cfg), deadline_ms=50.0)
+    with pytest.raises(SimulatedCrash):
+        eng1.run(max_iters=300)
+    clock.advance_ms(200.0)          # the engine stays dead past the TTL
+    eng2 = _engine("hybrid", store=CheckpointStore(store_dir),
+                   clock=clock, decode_n=decode_n)
+    assert eng2.recovery["expired"] == 2
+    assert eng2.stats["iters"] == 0
+    for r in eng2.finished:
+        assert r.status == "timed_out"
+        assert isinstance(r.error, DeadlineExceeded)
+
+
+def test_deadline_resumes_as_remaining_budget(tmp_path):
+    """The restarted engine must charge the budget already consumed
+    pre-crash + downtime — NOT restart the TTL.  150ms deadline, 100ms
+    burned before the crash, 40ms down: the request rehydrates (140 <
+    150) but 20ms more wall time expires it — a full-TTL reset would
+    have left 130ms of headroom and finished ok."""
+    clock = FakeClock()
+    store_dir = str(tmp_path / "store")
+    cfg, _ = _setup("hybrid")
+    _, decode_n = _reference("hybrid")
+    eng1 = _engine("hybrid", store=CheckpointStore(store_dir),
+                   plan=FaultPlan.from_spec("kill@iter=4"), clock=clock,
+                   decode_n=decode_n)
+    eng1.submit(Request(rid=1, prompt=_prompts(cfg)[1], max_new=MAX_NEW[1],
+                        deadline_ms=150.0))
+    clock.advance_ms(100.0)          # pre-crash queue/decode wall time
+    with pytest.raises(SimulatedCrash):
+        eng1.run(max_iters=300)
+    clock.advance_ms(40.0)           # downtime: consumed 140 < 150
+    eng2 = _engine("hybrid", store=CheckpointStore(store_dir),
+                   clock=clock, decode_n=decode_n)
+    assert eng2.recovery["expired"] == 0
+    assert sum(eng2.recovery.values()) == 1
+    clock.advance_ms(20.0)           # consumed 160 > 150: must expire
+    eng2.run(max_iters=300)
+    (req,) = eng2.finished
+    assert req.status == "timed_out"
+    assert isinstance(req.error, DeadlineExceeded)
+
+
+# ------------------------------------------------------------- kill spec
+def test_kill_spec_grammar():
+    (c,) = parse_spec("kill@iter=5:point=1:n=2")
+    assert c.kind == "kill"
+    assert c.params == {"iter": 5, "point": 1, "n": 2}
+    plan = FaultPlan.from_spec("kill@iter=3")
+    assert not plan.kill_now(2)
+    assert not plan.kill_now(3, point=1)   # wrong crash point
+    assert plan.kill_now(3)
+    assert not plan.kill_now(4)            # budget n=1 spent
+    with pytest.raises(ValueError):
+        parse_spec("kill@point=1")         # iter is required
